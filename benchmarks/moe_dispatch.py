@@ -1,0 +1,57 @@
+"""MoE expert-parallel dispatch strategies, costed with COMET's collective
+model (the AllToAll entry of Fig. 1(b)).
+
+Two EP designs for (tokens T over dp axis, E experts over the 16-way model
+axis, top-k routing), per layer:
+
+* **replicated-EP** (what the framework ships, models/moe.py): activations
+  are already replicated over `model`; each shard gathers its experts'
+  tokens locally and the combine is one AllReduce of the (T_local, d)
+  output over `model`.  Collective volume per layer: AR(T_l·d).
+* **a2a-EP** (classic GShard/DeepSpeed): tokens sequence-sharded over
+  `model`; dispatch AllToAll (T_l/16·k copies out), expert compute,
+  combine AllToAll back.  Volume: 2·A2A(T_l·k/16·d) — but the residual
+  stream must also be resharded (AG per layer) unless the whole block is
+  sequence-parallel.
+
+The crossover depends on top-k and d — exactly the kind of mapping
+decision COMET's explicit representation makes costable before committing
+an implementation.  Printed per assigned MoE arch at train_4k scale.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.collectives import collective_cost, noc_latency
+from repro.core.hardware import tpu_v5e
+
+
+def _lat(col: str, dv: float, P: int, noc) -> float:
+    cc = collective_cost(col, dv, P, noc)
+    return cc.volume_bytes / noc.channel_bandwidth + noc_latency(cc, noc)
+
+
+def run_all() -> Dict:
+    arch = tpu_v5e()
+    noc = arch.cluster_noc
+    P = 16                                  # model axis
+    out = {}
+    cases = [
+        ("deepseek-v3-671b", 7168, 8, 65536),   # d, top_k, T_local(dp=16)
+        ("qwen3-moe-30b-a3b", 2048, 8, 65536),
+    ]
+    for name, d, k, t_l in cases:
+        rep = _lat("AllReduce", t_l * d * 2, P, noc)
+        a2a = (2 * _lat("AllToAll", (t_l // P) * k * d * 2, P, noc)
+               + _lat("AllGather", t_l * d * 2, P, noc))
+        best = "replicated-EP" if rep <= a2a else "a2a-EP"
+        print(f"moe_dispatch_{name},{rep*1e6:.0f},"
+              f"replicated_AR={rep*1e3:.2f}ms;a2a={a2a*1e3:.2f}ms;"
+              f"per_layer_best={best}")
+        out[name] = {"replicated_ms": rep * 1e3, "a2a_ms": a2a * 1e3,
+                     "best": best}
+    return out
+
+
+if __name__ == "__main__":
+    run_all()

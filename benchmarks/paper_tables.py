@@ -1,0 +1,184 @@
+"""Benchmarks reproducing the paper's tables/figures (§V).
+
+Each function prints CSV rows ``name,us_per_call,derived`` and returns a
+dict of headline numbers (geomeans compared against the paper's claims).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import (attention, flash_attention, gemm_layernorm,
+                        gemm_softmax)
+from repro.core.hardware import cloud, edge
+from repro.core.ir import MappingSpec, evaluate_mapping
+from repro.core.search import search
+
+# Tables I / II
+GEMMS_EDGE = [(1, 1024, 64), (1, 4096, 128), (256, 1024, 128),
+              (4, 1024, 128), (512, 1024, 128), (512, 1024, 64)]
+GEMMS_CLOUD = [(1, 16384, 128), (1, 2048, 64), (256, 4096, 128),
+               (4, 8192, 128), (512, 2048, 64), (512, 4096, 128)]
+# Tables III / IV  (M, K, N, L)
+ATTN_EDGE = [(1024, 256, 1024, 256), (1, 128, 1024, 128),
+             (1, 256, 2048, 256), (1, 256, 512, 256),
+             (256, 128, 256, 128), (512, 128, 256, 128)]
+ATTN_CLOUD = [(1024, 512, 1024, 512), (1, 128, 16384, 128),
+              (1, 512, 4096, 512), (1, 128, 8192, 128),
+              (2048, 256, 2048, 256), (256, 512, 256, 512)]
+
+BUDGET = 250
+
+
+def _geomean(xs: List[float]) -> float:
+    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
+
+
+def fusion_comparison(workload_fn, label: str, paper_claim: float) -> Dict:
+    """Figs 10/11: latency & energy of each fusion mapping vs unfused."""
+    rows = []
+    lat_ratios, en_ratios = [], []
+    t0 = time.time()
+    for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud())):
+        for i, (M, N, K) in enumerate(shapes):
+            co = workload_fn(M, N, K)
+            res = {}
+            for v in ("unfused", "fused_epilogue", "fused_std", "fused_dist"):
+                r = search(co, arch, budget=BUDGET, seed=1, variants=[v])
+                res[v] = r
+            best_fused = min(("fused_epilogue", "fused_std", "fused_dist"),
+                             key=lambda v: res[v].latency)
+            lat_r = res["unfused"].latency / res[best_fused].latency
+            en_r = res["unfused"].energy_pj / res[best_fused].energy_pj
+            lat_ratios.append(lat_r)
+            en_ratios.append(en_r)
+            rows.append((f"{label}_{arch.name}_G{i+1}",
+                         res[best_fused].latency * 1e6,
+                         f"best={best_fused};lat_speedup={lat_r:.2f};"
+                         f"energy_red={en_r:.2f}"))
+    g_lat, g_en = _geomean(lat_ratios), _geomean(en_ratios)
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    print(f"{label}_geomean,{(time.time()-t0)*1e6/len(rows):.0f},"
+          f"lat={g_lat:.2f}x(paper {paper_claim}x);energy={g_en:.2f}x")
+    return {"geomean_latency_speedup": g_lat, "geomean_energy": g_en,
+            "paper_claim": paper_claim}
+
+
+def attention_variants() -> Dict:
+    """Fig 12: UA / PFA / FA latency & energy (paper: 1.82x / 1.54x FA)."""
+    lat_ratios, en_ratios = [], []
+    for shapes, arch in ((ATTN_EDGE, edge()), (ATTN_CLOUD, cloud())):
+        for i, (M, K, N, L) in enumerate(shapes):
+            ua = search(attention(M, K, N, L), arch, budget=BUDGET, seed=1,
+                        variants=["ua"]).best
+            pfa = search(attention(M, K, N, L), arch, budget=BUDGET, seed=1,
+                         variants=["pfa"]).best
+            fa = search(flash_attention(M, K, N, L), arch, budget=BUDGET,
+                        seed=1, variants=["fa"]).best
+            lat_ratios.append(ua.latency / fa.latency)
+            en_ratios.append(ua.energy_pj / fa.energy_pj)
+            print(f"attn_{arch.name}_A{i+1},{fa.latency*1e6:.2f},"
+                  f"ua={ua.latency*1e6:.1f}us;pfa={pfa.latency*1e6:.1f}us;"
+                  f"fa_speedup={ua.latency/fa.latency:.2f}")
+    g_lat, g_en = _geomean(lat_ratios), _geomean(en_ratios)
+    print(f"attn_geomean,0,lat={g_lat:.2f}x(paper 1.82x);"
+          f"energy={g_en:.2f}x(paper 1.54x)")
+    return {"geomean_latency_speedup": g_lat, "geomean_energy": g_en}
+
+
+def breakdowns() -> Dict:
+    """Figs 8/9: latency breakdown of distSM vs SM mappings per GEMM."""
+    out = {}
+    for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud())):
+        for i, (M, N, K) in enumerate(shapes):
+            co = gemm_softmax(M, N, K)
+            dist = evaluate_mapping(co, arch, MappingSpec(
+                variant="fused_dist", m_tiles=min(8, M), k_tiles=2))
+            std = evaluate_mapping(co, arch, MappingSpec(
+                variant="fused_std", m_tiles=min(8, M), k_tiles=2))
+            for tag, r in (("distSM", dist), ("SM", std)):
+                bd = r.cost.lat_breakdown
+                top = max(bd, key=bd.get)
+                print(f"breakdown_{arch.name}_G{i+1}_{tag},"
+                      f"{r.latency*1e6:.2f},dominant={top};"
+                      + ";".join(f"{k}={v*1e6:.1f}us"
+                                 for k, v in bd.items() if v > 0))
+                out[f"{arch.name}_G{i+1}_{tag}"] = top
+    return out
+
+
+def mapping_variation() -> Dict:
+    """Fig 7: latency/energy spread across sampled mappings (GEMM5 edge)."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    lats, ens = [], []
+    import random
+    from repro.core.search import candidate_specs, _sample
+    rng = random.Random(0)
+    cands = candidate_specs(co, arch)
+    for _ in range(300):
+        spec = _sample(rng, cands)
+        try:
+            r = evaluate_mapping(co, arch, spec)
+        except (ValueError, KeyError):
+            continue
+        if r.valid:
+            lats.append(r.latency)
+            ens.append(r.energy_pj)
+    spread_lat = max(lats) / min(lats)
+    spread_en = max(ens) / min(ens)
+    print(f"mapping_variation_lat,{min(lats)*1e6:.2f},spread={spread_lat:.1f}x")
+    print(f"mapping_variation_energy,{min(ens)/1e6:.2f},spread={spread_en:.1f}x")
+    return {"latency_spread": spread_lat, "energy_spread": spread_en}
+
+
+def beyond_paper_stats_collectives() -> Dict:
+    """Beyond-paper: distSM collectives on M×1 stats instead of the paper's
+    M×N tile annotation — the framework-level optimization enabled by the
+    explicit representation.  Compared at the SAME mapping (fixed tiling)
+    so the collective-term change is isolated; we report both the
+    collective-term reduction and the total-latency speedup."""
+    col_ratios, lat_ratios = [], []
+    for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud())):
+        for (M, N, K) in shapes:
+            co = gemm_softmax(M, N, K)
+            spec = MappingSpec(variant="fused_dist", m_tiles=min(8, M),
+                               k_tiles=2)
+            tile = evaluate_mapping(co, arch, spec)
+            stats = evaluate_mapping(
+                co, arch, MappingSpec(variant="fused_dist",
+                                      m_tiles=min(8, M), k_tiles=2,
+                                      collective_gran="stats"))
+            ct = tile.cost.lat_breakdown["collective"]
+            cs = stats.cost.lat_breakdown["collective"]
+            if cs > 0:
+                col_ratios.append(ct / cs)
+            lat_ratios.append(tile.latency / stats.latency)
+    g_col = _geomean(col_ratios) if col_ratios else float("nan")
+    g_lat = _geomean(lat_ratios)
+    print(f"stats_gran_speedup,0,collective_term={g_col:.1f}x;"
+          f"total_latency={g_lat:.2f}x_over_paper_faithful")
+    return {"collective_term_speedup": g_col, "latency_speedup": g_lat}
+
+
+def run_all() -> Dict:
+    print("# --- Fig 10/11: GEMM-Softmax fusion ---")
+    sm = fusion_comparison(gemm_softmax, "gemm_sm", 1.42)
+    print("# --- Fig 10/11: GEMM-LayerNorm fusion ---")
+    ln = fusion_comparison(gemm_layernorm, "gemm_ln", 3.46)
+    print("# --- Fig 12: attention variants ---")
+    at = attention_variants()
+    print("# --- Fig 8/9: breakdowns ---")
+    bd = breakdowns()
+    print("# --- Fig 7: mapping variation ---")
+    mv = mapping_variation()
+    print("# --- beyond-paper: stats-granularity collectives ---")
+    bp = beyond_paper_stats_collectives()
+    return {"gemm_sm": sm, "gemm_ln": ln, "attention": at,
+            "breakdowns": bd, "variation": mv, "beyond": bp}
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run artifacts (§Roofline).
+
+Reads artifacts/dryrun/*.json and prints, per (arch × shape × mesh):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+(useful-compute ratio) and the per-device memory analysis.  ``--markdown``
+emits the EXPERIMENTS.md table.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(tag_filter: str = "") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if (r.get("tag") or "") != tag_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def row(r: Dict) -> Dict:
+    rf = r["roofline"]
+    ca = r.get("cost_analysis", {})
+    ma = r.get("memory_analysis", {})
+    per_dev_bytes = (ma.get("argument_size_in_bytes", 0)
+                     + ma.get("temp_size_in_bytes", 0))
+    return {
+        "cell": f"{r['arch']}×{r['shape']}×{r['mesh']}",
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "t_compute": rf["t_compute_s"], "t_memory": rf["t_memory_s"],
+        "t_collective": rf["t_collective_s"],
+        "bottleneck": rf["bottleneck"],
+        "useful": r.get("useful_flop_ratio", 0.0),
+        "hlo_flops": ca.get("flops", 0.0),
+        "mem_per_dev": per_dev_bytes,
+        "compile_s": r.get("lower_compile_s", 0.0),
+    }
+
+
+def print_table(recs: List[Dict], markdown: bool = False) -> None:
+    rows = [row(r) for r in recs]
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+    if markdown:
+        print("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+              " bottleneck | useful FLOP ratio | bytes/device |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for x in rows:
+            print(f"| {x['arch']} | {x['shape']} | {x['mesh']} "
+                  f"| {x['t_compute']:.3e} | {x['t_memory']:.3e} "
+                  f"| {x['t_collective']:.3e} | **{x['bottleneck']}** "
+                  f"| {x['useful']:.2f} | {fmt_bytes(x['mem_per_dev'])} |")
+    else:
+        for x in rows:
+            print(f"roofline_{x['cell']},{x['t_compute']*1e6:.1f},"
+                  f"mem={x['t_memory']*1e6:.1f}us;"
+                  f"coll={x['t_collective']*1e6:.1f}us;"
+                  f"bott={x['bottleneck']};useful={x['useful']:.2f};"
+                  f"bytes/dev={fmt_bytes(x['mem_per_dev'])}")
+
+
+def run_all() -> Dict:
+    recs = load()
+    print(f"# --- roofline from {len(recs)} dry-run artifacts ---")
+    print_table(recs)
+    from collections import Counter
+    bt = Counter(r["roofline"]["bottleneck"] for r in recs)
+    print(f"roofline_summary,{len(recs)},bottlenecks={dict(bt)}")
+    return {"n": len(recs), "bottlenecks": dict(bt)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print_table(load(args.tag), markdown=args.markdown)

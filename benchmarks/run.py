@@ -1,0 +1,23 @@
+# Benchmark harness — one section per paper table/figure plus the roofline
+# from the dry-run artifacts.  Prints ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    from benchmarks import (costmodel_compare, kernel_bench, moe_dispatch,
+                            paper_tables, roofline)
+
+    print("# ================ paper tables (Figs 7-12) ================")
+    paper_tables.run_all()
+    print("# ================ cost-model compare (Fig 6) ===============")
+    costmodel_compare.run_all()
+    print("# ================ Pallas kernels ===========================")
+    kernel_bench.run_all()
+    print("# ================ MoE dispatch (COMET AllToAll model) ======")
+    moe_dispatch.run_all()
+    print("# ================ roofline (dry-run artifacts) =============")
+    roofline.run_all()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,8 @@
+"""COMET-JAX: compound-operation dataflow modeling with explicit
+collectives (Negi et al., CS.AR 2025), reproduced and extended into a
+multi-pod JAX training/inference framework.
+
+Subpackages: core (the paper), kernels (Pallas TPU), models (10 assigned
+architectures), configs, parallel, train, serve, launch.
+"""
+__version__ = "1.0.0"

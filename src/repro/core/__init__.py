@@ -1,0 +1,16 @@
+# COMET core — the paper's primary contribution: explicit-collective
+# mapping representation + compound-operation cost model + map-space search.
+from . import collectives, cost, hardware, ir, mapping, search, validate, workload, yamlio
+from .hardware import Arch, cloud, edge, tpu_v5e
+from .ir import MappingResult, MappingSpec, build_tree, evaluate_mapping
+from .search import SearchResult, search as map_search
+from .workload import (CompoundOp, attention, flash_attention, gemm,
+                       gemm_layernorm, gemm_softmax, ssd_chunk)
+
+__all__ = [
+    "Arch", "cloud", "edge", "tpu_v5e",
+    "MappingResult", "MappingSpec", "build_tree", "evaluate_mapping",
+    "SearchResult", "map_search",
+    "CompoundOp", "attention", "flash_attention", "gemm",
+    "gemm_layernorm", "gemm_softmax", "ssd_chunk",
+]

@@ -1,0 +1,144 @@
+"""Collective-operation hop/volume models (COMET §IV-B, Eq. 3/4).
+
+The paper uses the recursive doubling/halving algorithms [30] to compute
+both the total number of hops and the total data volume moved for each
+collective type.  Participants are peer memory instances at one level of
+the hierarchy (e.g. the GBs of all clusters), laid out row-major on the
+level's NoC mesh; hop distances are Manhattan distances between exchange
+partners.
+
+Conventions
+-----------
+``data_volume`` (DV) passed in is the *logical tensor size in bytes* on
+which the collective operates (the full tensor for All-Reduce / the
+gathered result for All-Gather, matching the paper's Tensor annotation on
+CO nodes).  Each model returns:
+
+    CollectiveCost(volume_bytes, hops, steps)
+
+where ``volume_bytes`` is the total bytes moved across the NoC per
+participant (the busiest node's traffic, which Eq. 3 charges), and
+``hops`` is the summed hop distance of its exchange schedule.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+from .hardware import NoCParams
+
+__all__ = [
+    "CollectiveCost",
+    "collective_cost",
+    "noc_latency",
+    "COLLECTIVE_TYPES",
+]
+
+COLLECTIVE_TYPES = (
+    "AllReduce",
+    "AllGather",
+    "ReduceScatter",
+    "Gather",
+    "Broadcast",
+    "AllToAll",
+)
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    volume_bytes: float   # bytes through the busiest participant
+    hops: int             # summed exchange-partner hop distance
+    steps: int            # number of communication steps
+
+
+def _step_distances(noc: NoCParams, participants: int) -> Tuple[int, ...]:
+    """Manhattan distance of the partner at linear offset 2^i, for each
+    recursive-doubling step i (log2 P steps).  Non-power-of-two participant
+    counts are rounded up to the next power of two (standard dissemination
+    fallback)."""
+    if participants <= 1:
+        return ()
+    steps = max(1, math.ceil(math.log2(participants)))
+    return tuple(
+        noc.manhattan(0, min((1 << i), noc.num_nodes - 1) if noc.num_nodes > 1 else 0)
+        or 1
+        for i in range(steps)
+    )
+
+
+def collective_cost(
+    col_type: str,
+    data_volume: float,
+    participants: int,
+    noc: NoCParams,
+) -> CollectiveCost:
+    """Volume/hops for one collective over ``participants`` peers.
+
+    Recursive halving (Reduce-Scatter): step i exchanges DV/2^(i+1);
+    recursive doubling (All-Gather): step i exchanges DV*2^i/P.
+    All-Reduce = RS + AG  => 2*DV*(P-1)/P volume.
+    Gather/Broadcast: tree over log2 P steps, total (P-1)/P * DV through
+    the root.  All-to-all: each node exchanges DV*(P-1)/P in P-1 direct
+    transfers (paired exchange schedule).
+    """
+    P = int(participants)
+    if P <= 1 or data_volume <= 0:
+        return CollectiveCost(0.0, 0, 0)
+    if col_type not in COLLECTIVE_TYPES:
+        raise ValueError(f"unknown collective type {col_type!r}")
+
+    dists = _step_distances(noc, P)
+    steps = len(dists)
+    shard = data_volume / P
+
+    if col_type == "ReduceScatter":
+        # recursive halving: volumes DV/2, DV/4, ... DV/P
+        vol = sum(data_volume / (1 << (i + 1)) for i in range(steps))
+        hops = sum(dists)
+    elif col_type == "AllGather":
+        # recursive doubling: volumes DV/P, 2DV/P, ... DV/2
+        vol = sum(shard * (1 << i) for i in range(steps))
+        hops = sum(dists)
+    elif col_type == "AllReduce":
+        rs = collective_cost("ReduceScatter", data_volume, P, noc)
+        ag = collective_cost("AllGather", data_volume, P, noc)
+        return CollectiveCost(rs.volume_bytes + ag.volume_bytes,
+                              rs.hops + ag.hops, rs.steps + ag.steps)
+    elif col_type == "Gather":
+        # binomial tree toward the root; root receives (P-1)/P * DV
+        vol = data_volume * (P - 1) / P
+        hops = sum(dists)
+    elif col_type == "Broadcast":
+        vol = data_volume * (P - 1) / P
+        hops = sum(dists)
+    elif col_type == "AllToAll":
+        vol = data_volume * (P - 1) / P
+        # P-1 paired exchanges; average Manhattan distance on the mesh
+        avg = _mesh_avg_distance(noc)
+        hops = int(round(avg * (P - 1)))
+        steps = P - 1
+    else:  # pragma: no cover
+        raise AssertionError(col_type)
+
+    return CollectiveCost(float(vol), int(hops), steps)
+
+
+def _mesh_avg_distance(noc: NoCParams) -> float:
+    r, c = noc.mesh
+    if r * c <= 1:
+        return 1.0
+    # mean Manhattan distance between distinct nodes of an r x c mesh
+    total = 0
+    for a in range(r * c):
+        for b in range(r * c):
+            if a != b:
+                total += noc.manhattan(a, b)
+    return total / (r * c * (r * c - 1))
+
+
+def noc_latency(cost: CollectiveCost, noc: NoCParams) -> float:
+    """Eq. 3: NoCLat = t_router * hops + t_enq * DV / W  (seconds)."""
+    if cost.volume_bytes <= 0:
+        return 0.0
+    return noc.t_router * cost.hops + noc.t_enq * (cost.volume_bytes / noc.channel_width)

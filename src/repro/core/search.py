@@ -1,0 +1,149 @@
+"""Map-space search (COMET §V-A).
+
+Iterative randomized search over the 4-D design space of Fig. 1 —
+tiling factors × loop order/spatial unrolling × collective strategy ×
+scheduling — with constraint pruning (memory-fit validation) and a small
+mutation-based hill-climb.  The paper uses up to 10,000 iterations; so do
+we (``budget``).  Deterministic under ``seed``.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .hardware import Arch
+from .ir import MappingResult, MappingSpec, evaluate_mapping
+from .workload import CompoundOp
+
+__all__ = ["SearchResult", "search", "candidate_specs", "pow2_tilings"]
+
+
+@dataclass
+class SearchResult:
+    best: MappingResult
+    evaluated: int
+    valid: int
+    history: List[Tuple[int, float]] = field(default_factory=list)  # (iter, best latency)
+
+    @property
+    def latency(self) -> float:
+        return self.best.latency
+
+    @property
+    def energy_pj(self) -> float:
+        return self.best.energy_pj
+
+
+def pow2_tilings(size: int, cap: int = 4096) -> List[int]:
+    """Candidate temporal tile counts for a dimension: powers of two up to
+    min(size, cap), always including 1 and the full size when small."""
+    out = [1]
+    t = 2
+    while t <= min(size, cap):
+        out.append(t)
+        t *= 2
+    if size <= cap and size not in out:
+        out.append(size)
+    return out
+
+
+def candidate_specs(co: CompoundOp, arch: Arch, *,
+                    variants: Optional[Sequence[str]] = None,
+                    allow_stats_gran: bool = False) -> Dict[str, List]:
+    """The discrete choice sets for each MappingSpec field."""
+    M = co.dim_sizes.get("M", 1)
+    K = co.dim_sizes.get("K", 1)
+    N = co.dim_sizes.get("N", 1)
+    if variants is None:
+        if co.name in ("attention", "flash_attention"):
+            variants = ["ua", "pfa", "fa"]
+        elif co.name in ("gemm_softmax", "gemm_layernorm"):
+            variants = ["unfused", "fused_epilogue", "fused_std", "fused_dist"]
+        else:
+            variants = ["unfused", "fused_dist"]
+    grans = ["tile", "stats"] if allow_stats_gran else ["tile"]
+    return {
+        "variant": list(variants),
+        "m_tiles": pow2_tilings(M),
+        "k_tiles": pow2_tilings(K, cap=64),
+        "n_tiles": pow2_tilings(N, cap=256),
+        "schedule": ["sequential", "pipelined"],
+        "collective_gran": grans,
+        "loop_order_gb": [("M", "N"), ("N", "M")],
+    }
+
+
+def _sample(rng: random.Random, cands: Dict[str, List]) -> MappingSpec:
+    return MappingSpec(
+        variant=rng.choice(cands["variant"]),
+        m_tiles=rng.choice(cands["m_tiles"]),
+        k_tiles=rng.choice(cands["k_tiles"]),
+        n_tiles=rng.choice(cands["n_tiles"]),
+        schedule=rng.choice(cands["schedule"]),
+        collective_gran=rng.choice(cands["collective_gran"]),
+        loop_order_gb=rng.choice(cands["loop_order_gb"]),
+    )
+
+
+def _mutate(rng: random.Random, spec: MappingSpec, cands: Dict[str, List]) -> MappingSpec:
+    fieldname = rng.choice(list(cands.keys()))
+    return replace(spec, **{fieldname: rng.choice(cands[fieldname])})
+
+
+def search(co: CompoundOp, arch: Arch, *,
+           budget: int = 2000,
+           seed: int = 0,
+           objective: str = "latency",
+           variants: Optional[Sequence[str]] = None,
+           allow_stats_gran: bool = False,
+           hillclimb_frac: float = 0.5) -> SearchResult:
+    """Randomized search + hill-climb.  ``objective`` is 'latency',
+    'energy' or 'edp' (energy-delay product)."""
+    rng = random.Random(seed)
+    cands = candidate_specs(co, arch, variants=variants,
+                            allow_stats_gran=allow_stats_gran)
+
+    def score(r: MappingResult) -> float:
+        if not r.valid:
+            return math.inf
+        if objective == "latency":
+            return r.latency
+        if objective == "energy":
+            return r.energy_pj
+        return r.latency * r.energy_pj
+
+    best: Optional[MappingResult] = None
+    best_score = math.inf
+    evaluated = valid = 0
+    history: List[Tuple[int, float]] = []
+    seen = set()
+
+    explore = max(1, int(budget * (1.0 - hillclimb_frac)))
+    for i in range(budget):
+        if best is None or i < explore:
+            spec = _sample(rng, cands)
+        else:
+            spec = _mutate(rng, best.spec, cands)
+        key = (spec.variant, spec.m_tiles, spec.k_tiles, spec.n_tiles,
+               spec.schedule, spec.collective_gran, spec.loop_order_gb)
+        if key in seen:
+            continue
+        seen.add(key)
+        try:
+            r = evaluate_mapping(co, arch, spec)
+        except (ValueError, KeyError):
+            continue
+        evaluated += 1
+        if r.valid:
+            valid += 1
+        s = score(r)
+        if s < best_score:
+            best, best_score = r, s
+            history.append((i, r.latency))
+
+    if best is None:
+        raise RuntimeError(f"no valid mapping found for {co.name} on {arch.name}")
+    return SearchResult(best=best, evaluated=evaluated, valid=valid,
+                        history=history)

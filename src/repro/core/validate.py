@@ -1,0 +1,75 @@
+"""Memory-fit validation (COMET Fig. 3: 'Validation' stage).
+
+Before a mapping instance is converted to the IR and costed, COMET checks
+that all tensors staged at each memory level fit within that level's
+capacity (×2 for double buffering, §IV-B).  Invalid mappings are rejected
+by the mapping-instance generator / search.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from .hardware import Arch
+from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
+from .workload import TensorSpec
+
+__all__ = ["validate_tree", "ValidationError", "residency_report"]
+
+
+class ValidationError(Exception):
+    pass
+
+
+def _staged_tensors(node: TileNode) -> List[str]:
+    """Tensors resident at this node: its own i/o plus everything its
+    direct children exchange (fused intermediates live here)."""
+    names = set(node.input_tensors) | set(node.output_tensors)
+    for ch in node.children:
+        if isinstance(ch, TileNode):
+            names |= set(ch.input_tensors) | set(ch.output_tensors)
+        elif isinstance(ch, CollectiveNode):
+            names.add(ch.tensor)
+    return sorted(names)
+
+
+def residency_report(node: Node, arch: Arch, tiling: Tiling,
+                     tensors: Dict[str, TensorSpec]) -> List[Tuple[str, str, float, float]]:
+    """[(level, label, resident_bytes, capacity_bytes)] for every TileNode."""
+    out: List[Tuple[str, str, float, float]] = []
+
+    def rec(n: Node) -> None:
+        if not isinstance(n, TileNode):
+            return
+        staged = _staged_tensors(n)
+        dbl = 2.0 if arch.level(n.level).double_buffered else 1.0
+        resident = n.extra_resident_bytes
+        for t in staged:
+            if t in n.bypass_tensors:
+                continue
+            resident += tiling.tensor_tile_bytes(tensors[t], n.level, below=True) * dbl
+        if n.level == "OB":
+            # split: inputs -> IB+WB, outputs -> OB
+            cap = (arch.ib.size_bytes + arch.wb.size_bytes + arch.ob.size_bytes)
+        else:
+            cap = arch.level(n.level).size_bytes
+        out.append((n.level, n.label or f"T[{n.level}]^{n.index}", resident, cap))
+        for ch in n.children:
+            rec(ch)
+
+    rec(node)
+    return out
+
+
+def validate_tree(node: Node, arch: Arch, tiling: Tiling,
+                  tensors: Dict[str, TensorSpec], *, raise_on_fail: bool = False) -> bool:
+    """True iff every TileNode's staged tensors fit its level capacity."""
+    tiling.validate()
+    for level, label, resident, cap in residency_report(node, arch, tiling, tensors):
+        if level == "DRAM":
+            continue  # DRAM holds full tensors by construction
+        if resident > cap:
+            if raise_on_fail:
+                raise ValidationError(
+                    f"{label}: {resident/1024:.1f} KiB > capacity {cap/1024:.1f} KiB")
+            return False
+    return True

@@ -1,0 +1,12 @@
+# Pallas TPU kernels for the compound operations the paper optimizes:
+# FlashAttention (FA dataflow), fused GEMM-Softmax, fused GEMM-LayerNorm/
+# RMSNorm, and the Mamba-2 SSD chunk scan.  Block sizes are chosen by the
+# COMET cost model (autotune.py); ref.py holds the pure-jnp oracles.
+from . import autotune, ops, ref
+from .flash_attention import flash_attention
+from .gemm_layernorm import gemm_layernorm, gemm_rmsnorm
+from .gemm_softmax import gemm_softmax
+from .ssd import ssd_scan
+
+__all__ = ["autotune", "ops", "ref", "flash_attention", "gemm_layernorm",
+           "gemm_rmsnorm", "gemm_softmax", "ssd_scan"]

@@ -1,0 +1,128 @@
+"""COMET-driven Pallas block-size selection (DESIGN.md §2, kernel-level use).
+
+This is the paper's mapping-space exploration applied to TPU tiles: for each
+kernel we build the corresponding compound-op workload, instantiate the
+TPU-v5e hardware model, and evaluate candidate tile shapes with the COMET
+cost model (memory-fit validation + Eq. 1–7 latency).  Results are cached
+per shape.  All functions degrade to safe hardware-aligned defaults if the
+search finds nothing valid.
+
+VMEM budget accounting mirrors the kernels' actual scratch/BlockSpec usage.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+from repro.core import hardware, workload
+from repro.core.cost import systolic_gemm_cycles
+from repro.core.hardware import tpu_v5e
+
+__all__ = ["attention_blocks", "gemm_epilogue_blocks", "ssd_chunk_len",
+           "VMEM_BUDGET"]
+
+# usable VMEM per core for kernel working sets (half of 128 MB, leaving room
+# for Pallas double buffering which the cost model assumes)
+VMEM_BUDGET = 64 * 1024 * 1024
+_LANE = 128  # MXU/VPU lane alignment
+
+
+def _align(x: int, a: int = _LANE) -> int:
+    return max(a, (x // a) * a)
+
+
+@functools.lru_cache(maxsize=256)
+def attention_blocks(sq: int, skv: int, d: int) -> Tuple[int, int]:
+    """(block_q, block_k) for the FlashAttention kernel via COMET search.
+
+    Working set per (bq, bk): q(bq,d) + k/v(bk,d)*2 + acc(bq,d) f32 +
+    s(bq,bk) f32 (+ double buffering handled by budget halving).
+    """
+    arch = tpu_v5e()
+    best = None
+    cands = [128, 256, 512, 1024]
+    for bq in cands:
+        if bq > max(sq, _LANE):
+            continue
+        for bk in cands:
+            if bk > max(skv, _LANE):
+                continue
+            vmem = (bq * d * 2 + 2 * bk * d * 2 + bq * d * 4 + bq * bk * 4
+                    + 2 * bq * _LANE * 4)
+            if vmem * 2 > VMEM_BUDGET:
+                continue
+            # COMET leaf costs: two MXU GEMM tiles + VPU online-softmax ops
+            u = arch.gemm_unit
+            g1 = systolic_gemm_cycles(bq, bk, d, u.array_rows, u.array_cols,
+                                      u.num_arrays) / u.freq_hz
+            g2 = systolic_gemm_cycles(bq, d, bk, u.array_rows, u.array_cols,
+                                      u.num_arrays) / u.freq_hz
+            simd = (5 * bq * bk + 6 * bq) / arch.simd_unit.peak_ops_per_sec
+            mem = (bq * d * 2 + 2 * bk * d * 2) / arch.gb.bandwidth
+            n_blocks = math.ceil(max(sq, 1) / bq) * math.ceil(max(skv, 1) / bk)
+            lat = n_blocks * max(g1 + g2 + simd, mem)
+            if best is None or lat < best[0]:
+                best = (lat, bq, bk)
+    if best is None:
+        return (_LANE, _LANE)
+    return best[1], best[2]
+
+
+@functools.lru_cache(maxsize=256)
+def gemm_epilogue_blocks(m: int, n: int, k: int) -> Tuple[int, int]:
+    """(block_m, block_k) for the fused GEMM-SM / GEMM-LN kernels.
+
+    Constraint: acc (block_m, N) f32 + B slice (block_k, N) must fit VMEM.
+    """
+    arch = tpu_v5e()
+    best = None
+    for bm in (128, 256, 512):
+        for bk in (128, 256, 512):
+            if bk > max(k, _LANE):
+                continue
+            vmem = bm * n * 4 + bk * n * 2 + bm * bk * 2 + bm * n * 2
+            if vmem * 2 > VMEM_BUDGET:
+                continue
+            u = arch.gemm_unit
+            g = systolic_gemm_cycles(bm, n, bk, u.array_rows, u.array_cols,
+                                     u.num_arrays) / u.freq_hz
+            mem = (bm * bk * 2 + bk * n * 2) / arch.dram.bandwidth
+            n_iters = math.ceil(max(m, 1) / bm) * math.ceil(max(k, 1) / bk)
+            epi = (4 * bm * n) / arch.simd_unit.peak_ops_per_sec \
+                * math.ceil(max(m, 1) / bm)
+            lat = n_iters * max(g, mem) + epi
+            if best is None or lat < best[0]:
+                best = (lat, bm, bk)
+    if best is None:
+        return (_LANE, _LANE)
+    return best[1], best[2]
+
+
+@functools.lru_cache(maxsize=256)
+def ssd_chunk_len(s: int, p: int, n: int) -> int:
+    """Chunk length for the SSD kernel via the COMET ssd_chunk compound op.
+
+    Larger chunks amortize the state GEMMs but grow the (c, c) intra-chunk
+    matrix quadratically; COMET's cost model finds the knee.
+    """
+    arch = tpu_v5e()
+    best = None
+    u = arch.gemm_unit
+    for c in (128, 256, 512):
+        if c > max(s, _LANE):
+            continue
+        vmem = (c * p * 2 * 2 + 2 * c * n * 2 + c * c * 4 + n * p * 4)
+        if vmem * 2 > VMEM_BUDGET:
+            continue
+        # per-chunk: 3 GEMM tiles + decay SIMD; n_chunks = s/c
+        g = (systolic_gemm_cycles(c, c, n, u.array_rows, u.array_cols, u.num_arrays)
+             + systolic_gemm_cycles(c, p, c, u.array_rows, u.array_cols, u.num_arrays)
+             + systolic_gemm_cycles(n, p, c, u.array_rows, u.array_cols, u.num_arrays)
+             ) / u.freq_hz
+        simd = (3 * c * c + 2 * c * p) / arch.simd_unit.peak_ops_per_sec
+        mem = (c * p * 2 * 2 + 2 * c * n * 2) / arch.gb.bandwidth
+        lat = math.ceil(max(s, 1) / c) * max(g + simd, mem)
+        if best is None or lat < best[0]:
+            best = (lat, c)
+    return 128 if best is None else best[1]

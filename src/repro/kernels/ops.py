@@ -1,0 +1,68 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These are the entry points the model zoo uses.  On non-TPU backends the
+kernels run in interpret mode (Pallas executes the kernel body in Python on
+CPU), so the same code path is exercised everywhere; ``use_kernels=False``
+falls back to the pure-jnp references (the default for training on CPU —
+fast, and the kernels' custom_vjp recompute backward is reference-based
+anyway).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .gemm_layernorm import gemm_layernorm, gemm_rmsnorm
+from .gemm_softmax import gemm_softmax
+from .ssd import ssd_scan
+
+__all__ = [
+    "mha", "fused_gemm_softmax", "fused_gemm_layernorm", "fused_gemm_rmsnorm",
+    "ssd", "flash_attention", "gemm_softmax", "gemm_layernorm",
+    "gemm_rmsnorm", "ssd_scan",
+]
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+        causal: bool = True, scale: Optional[float] = None,
+        window: Optional[int] = None, use_kernel: bool = False) -> jax.Array:
+    """Multi-head attention (GQA) — Pallas FlashAttention or jnp reference."""
+    if use_kernel:
+        return flash_attention(q, k, v, causal, scale, window)
+    return ref.attention_ref(q, k, v, causal=causal, scale=scale,
+                             window=window)
+
+
+def fused_gemm_softmax(a, b, *, use_kernel: bool = False):
+    if use_kernel:
+        return gemm_softmax(a, b)
+    return ref.gemm_softmax_ref(a, b)
+
+
+def fused_gemm_layernorm(a, b, gamma, beta, *, eps: float = 1e-6,
+                         use_kernel: bool = False):
+    if use_kernel:
+        return gemm_layernorm(a, b, gamma, beta, eps=eps)
+    return ref.gemm_layernorm_ref(a, b, gamma, beta, eps=eps)
+
+
+def fused_gemm_rmsnorm(a, b, gamma, *, eps: float = 1e-6,
+                       use_kernel: bool = False):
+    if use_kernel:
+        return gemm_rmsnorm(a, b, gamma, eps=eps)
+    return ref.gemm_rmsnorm_ref(a, b, gamma, eps=eps)
+
+
+def ssd(xdt, dA, B, C, *, chunk: Optional[int] = None,
+        use_kernel: bool = False):
+    """Mamba-2 SSD chunk scan."""
+    if use_kernel:
+        return ssd_scan(xdt, dA, B, C, chunk)
+    if chunk:
+        return ref.ssd_chunked_ref(xdt, dA, B, C, chunk=chunk)
+    return ref.ssd_ref(xdt, dA, B, C)

@@ -1,0 +1,157 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the mathematically transparent version of the fused
+kernel; tests sweep shapes/dtypes and assert allclose between the kernel
+(interpret=True on CPU) and these references.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "gemm_softmax_ref",
+    "gemm_layernorm_ref",
+    "gemm_rmsnorm_ref",
+    "ssd_ref",
+    "ssd_chunked_ref",
+]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  scale: Optional[float] = None,
+                  window: Optional[int] = None) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    ``window``: optional sliding-window width (causal only).
+    Returns (B, Hq, Sq, D) in q.dtype; math in f32.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal or window is not None:
+        q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align last tokens
+        k_pos = jnp.arange(Skv)[None, :]
+        mask = jnp.ones((Sq, Skv), dtype=bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def gemm_softmax_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """softmax(a @ b) over the last axis; math in f32."""
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    return jax.nn.softmax(c, axis=-1).astype(a.dtype)
+
+
+def gemm_layernorm_ref(a: jax.Array, b: jax.Array, gamma: jax.Array,
+                       beta: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """LayerNorm(a @ b) * gamma + beta over the last axis; math in f32."""
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    mu = c.mean(axis=-1, keepdims=True)
+    var = ((c - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (c - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(a.dtype)
+
+
+def gemm_rmsnorm_ref(a: jax.Array, b: jax.Array, gamma: jax.Array, *,
+                     eps: float = 1e-6) -> jax.Array:
+    """RMSNorm(a @ b) * gamma over the last axis; math in f32."""
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    ms = (c ** 2).mean(axis=-1, keepdims=True)
+    return (c * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)).astype(a.dtype)
+
+
+def ssd_ref(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array) -> jax.Array:
+    """Naive SSD (Mamba-2 SSM) recurrence oracle.
+
+    xdt: (BH, S, P)   — dt-weighted inputs (x * dt)
+    dA:  (BH, S)      — per-step log-decay (A * dt, A < 0)
+    B:   (BH, S, N)   — input projections
+    C:   (BH, S, N)   — output projections
+    returns y: (BH, S, P);  h_t = exp(dA_t) h_{t-1} + B_t xdt_t^T;
+    y_t = C_t @ h_t.  Math in f32.
+    """
+    BH, S, P = xdt.shape
+    N = B.shape[-1]
+    xf, df = xdt.astype(jnp.float32), dA.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, da_t, b_t, c_t = inp
+        h = jnp.exp(da_t)[:, None, None] * h + b_t[:, :, None] * x_t[:, None, :]
+        y = jnp.einsum("bn,bnp->bp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (jnp.swapaxes(xf, 0, 1), jnp.swapaxes(df, 0, 1),
+          jnp.swapaxes(Bf, 0, 1), jnp.swapaxes(Cf, 0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(xdt.dtype)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{k=j+1..i} dA_k for i >= j else -inf (log decay matrix)."""
+    S = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_{j+1..i}
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
+                    *, chunk: int = 64) -> jax.Array:
+    """Chunked SSD (state-space duality) oracle — the blocked algorithm the
+    Pallas kernel implements: intra-chunk 'attention-like' term + inter-chunk
+    state carry.  Numerically equivalent to :func:`ssd_ref`."""
+    BH, S, P = xdt.shape
+    N = B.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    xf = xdt.astype(jnp.float32).reshape(BH, nc, chunk, P)
+    df = dA.astype(jnp.float32).reshape(BH, nc, chunk)
+    Bf = B.astype(jnp.float32).reshape(BH, nc, chunk, N)
+    Cf = C.astype(jnp.float32).reshape(BH, nc, chunk, N)
+
+    cs = jnp.cumsum(df, axis=-1)                       # (BH, nc, c)
+    L = jnp.exp(_segsum(df))                           # (BH, nc, c, c)
+    # intra-chunk
+    CB = jnp.einsum("bzin,bzjn->bzij", Cf, Bf) * L
+    y_intra = jnp.einsum("bzij,bzjp->bzip", CB, xf)
+    # chunk-final states
+    decay_in = jnp.exp(cs[..., -1:] - cs)              # (BH, nc, c)
+    chunk_state = jnp.einsum("bzcn,bzc,bzcp->bznp", Bf, decay_in, xf)
+    # carry states across chunks
+    total = jnp.exp(cs[..., -1])                       # (BH, nc)
+
+    def carry(h, inp):
+        st, tt = inp
+        out = h
+        h = tt[:, None, None] * h + st
+        return h, out
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    _, prev = jax.lax.scan(
+        carry, h0, (jnp.swapaxes(chunk_state, 0, 1), jnp.swapaxes(total, 0, 1)))
+    prev = jnp.swapaxes(prev, 0, 1)                    # (BH, nc, N, P) state before chunk
+    y_inter = jnp.einsum("bzcn,bznp,bzc->bzcp", Cf, prev, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(BH, S, P)
+    return y.astype(xdt.dtype)

@@ -1,0 +1,3 @@
+# Launchers: mesh construction, multi-pod dry-run, training and serving
+# drivers.  NOTE: dryrun must be run as a module entry point so its
+# XLA_FLAGS line executes before jax initializes.

@@ -1,0 +1,88 @@
+"""Abstract input specs (ShapeDtypeStruct + sharding) for every
+(architecture × shape × mesh) dry-run cell — weak-type-correct, shardable,
+zero allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import Shape
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.parallel.sharding import (batch_sharding, batch_spec,
+                                     cache_shardings, param_shardings,
+                                     zero1_shardings)
+
+__all__ = ["batch_specs", "state_specs", "cache_specs", "with_shardings"]
+
+
+def with_shardings(abstract, shardings):
+    """Attach shardings to ShapeDtypeStructs (lower() picks them up)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape, mesh: Optional[Mesh],
+                *, with_labels: bool = True) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    out: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encdec and shape.kind != "decode":
+        Se = max(1, shape.seq_len // cfg.enc_ratio)
+        out["src_embeds"] = jax.ShapeDtypeStruct((B, Se, cfg.d_model),
+                                                 jnp.float32)
+    if mesh is not None:
+        out = {k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=batch_sharding(mesh, B, v.ndim))
+            for k, v in out.items()}
+    return out
+
+
+def state_specs(model: Model, mesh: Optional[Mesh], *,
+                with_opt: bool = True) -> Tuple[Any, Any]:
+    """(abstract TrainState-or-params, matching shardings)."""
+    ab = model.abstract_params()
+    ax = model.param_axes()
+    if mesh is None:
+        return ab, None
+    if not model.cfg.tensor_parallel:
+        # replicate-everything TP-off mode (small models: pure DP + ZeRO)
+        ax = jax.tree.map(lambda t: tuple(None for _ in t), ax,
+                          is_leaf=lambda x: isinstance(x, tuple) and all(
+                              isinstance(e, (str, type(None))) for e in x))
+    # FSDP/ZeRO-3: params get the same extra data-axis sharding as the
+    # optimizer moments (weights all-gathered per layer by GSPMD)
+    psh = (zero1_shardings(ax, ab, mesh) if model.cfg.fsdp
+           else param_shardings(ax, ab, mesh))
+    if not with_opt:
+        return with_shardings(ab, psh), psh
+    from repro.train.optimizer import OptState
+    from repro.train.train_step import TrainState
+    f32 = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), t)
+    zsh = zero1_shardings(ax, ab, mesh)
+    scalar_sh = NamedSharding(mesh, P())
+    opt_ab = OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      m=f32(ab), v=f32(ab), err=None)
+    opt_sh = OptState(step=scalar_sh, m=zsh, v=zsh, err=None)
+    state_ab = TrainState(params=ab, opt=opt_ab)
+    state_sh = TrainState(params=psh, opt=opt_sh)
+    return with_shardings(state_ab, state_sh), state_sh
+
+
+def cache_specs(model: Model, shape: Shape, mesh: Optional[Mesh]):
+    """(abstract cache, shardings) for decode cells."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_ab = jax.eval_shape(lambda: model.init_cache(B, S))
+    if mesh is None:
+        return cache_ab, None
+    csh = cache_shardings(cache_ab, mesh, B)
+    return with_shardings(cache_ab, csh), csh

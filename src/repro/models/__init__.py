@@ -1,0 +1,6 @@
+from . import attention, config, encdec, layers, model, moe, param, ssm, transformer
+from .config import ModelConfig
+from .model import Model
+
+__all__ = ["ModelConfig", "Model", "attention", "config", "encdec", "layers",
+           "model", "moe", "param", "ssm", "transformer"]

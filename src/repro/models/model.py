@@ -1,0 +1,74 @@
+"""Model facade: one object tying config -> specs -> init/abstract params ->
+train/prefill/decode callables, uniform across all families."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from . import encdec, transformer
+from .config import ModelConfig
+from .layers import cross_entropy_loss
+from .param import abstract_tree, axes_tree, count_params, init_tree
+
+__all__ = ["Model"]
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    @property
+    def specs(self):
+        if self.cfg.is_encdec:
+            return encdec.encdec_specs(self.cfg)
+        return transformer.decoder_specs(self.cfg)
+
+    def init(self, key: jax.Array):
+        return init_tree(self.specs, key)
+
+    def abstract_params(self):
+        return abstract_tree(self.specs)
+
+    def param_axes(self):
+        return axes_tree(self.specs)
+
+    def n_params(self) -> int:
+        return count_params(self.specs)
+
+    # ------------------------------------------------------------ forward
+    def logits(self, params, batch: Dict[str, jax.Array],
+               mesh: Optional[Mesh] = None) -> jax.Array:
+        if self.cfg.is_encdec:
+            return encdec.encdec_forward(self.cfg, params, batch["src_embeds"],
+                                         batch["tokens"], mesh)
+        return transformer.forward(self.cfg, params, batch["tokens"], mesh)
+
+    def loss(self, params, batch: Dict[str, jax.Array],
+             mesh: Optional[Mesh] = None) -> jax.Array:
+        logits = self.logits(params, batch, mesh)
+        return cross_entropy_loss(logits, batch["labels"], self.cfg.vocab_size)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, cache_len: int):
+        if self.cfg.is_encdec:
+            return encdec.encdec_init_cache(self.cfg, batch, cache_len)
+        return transformer.init_cache(self.cfg, batch, cache_len)
+
+    def prefill(self, params, batch: Dict[str, jax.Array], cache_len: int,
+                mesh: Optional[Mesh] = None):
+        if self.cfg.is_encdec:
+            return encdec.encdec_prefill(self.cfg, params, batch["src_embeds"],
+                                         batch["tokens"], cache_len, mesh)
+        return transformer.prefill(self.cfg, params, batch["tokens"],
+                                   cache_len, mesh)
+
+    def decode(self, params, cache, tokens: jax.Array,
+               mesh: Optional[Mesh] = None):
+        if self.cfg.is_encdec:
+            return encdec.encdec_decode(self.cfg, params, cache, tokens, mesh)
+        return transformer.decode(self.cfg, params, cache, tokens, mesh)

@@ -1,0 +1,358 @@
+"""Unified decoder-LM engine: every assigned non-enc-dec architecture
+(dense GQA/MQA, MLA+MoE, softmax-MoE, Mamba-2 SSD, Hymba hybrid) is a
+configuration of this module.  Layers are scanned (stacked params) so the
+HLO is O(1) in depth; a separate small scan handles DeepSeek's leading
+dense layers.
+
+Paths: ``forward`` (training, full-seq causal), ``prefill`` (builds the
+cache), ``decode`` (one token, fixed shapes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (apply_norm, cross_entropy_loss, embed_apply, embed_specs,
+                     mlp_apply, mlp_specs, norm_specs, unembed_apply)
+from .param import ParamSpec
+
+__all__ = ["decoder_specs", "forward", "prefill", "decode", "init_cache",
+           "dp_axes", "constrain"]
+
+
+def dp_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x: jax.Array, mesh: Optional[Mesh], spec: P) -> jax.Array:
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _residual_spec(cfg: ModelConfig, mesh: Optional[Mesh]) -> P:
+    """Residual-stream sharding: batch over dp; optionally the sequence dim
+    over 'model' (sequence parallelism — converts per-layer TP all-reduces
+    into reduce-scatter/all-gather pairs, halving collective bytes)."""
+    dp = dp_axes(mesh)
+    seq = "model" if (cfg.seq_shard and mesh is not None
+                      and "model" in mesh.axis_names) else None
+    return P(dp if dp else None, seq, None)
+
+
+def _remat(cfg: ModelConfig, body):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return body
+    pol = (jax.checkpoint_policies.nothing_saveable
+           if cfg.remat_policy == "full"
+           else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body, policy=pol)
+
+
+def _unroll(cfg: ModelConfig, length: int) -> int:
+    return max(1, min(cfg.scan_unroll, length))
+
+
+# ------------------------------------------------------------------ specs
+
+
+def _mixer_specs(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    if cfg.has_attention:
+        if cfg.attn_type == "mla":
+            s["attn"] = attn.mla_specs(cfg, L)
+        else:
+            s["attn"] = attn.gqa_specs(cfg, L)
+    if cfg.has_ssm:
+        s["ssm"] = ssm_mod.ssm_specs(cfg, L)
+    if cfg.family == "hybrid":
+        s["alpha_attn"] = ParamSpec((L, cfg.d_model), ("layer", "embed"),
+                                    init="ones", dtype=cfg.dtype)
+        s["alpha_ssm"] = ParamSpec((L, cfg.d_model), ("layer", "embed"),
+                                   init="ones", dtype=cfg.dtype)
+    return s
+
+
+def _layer_specs(cfg: ModelConfig, L: int, use_moe: bool) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"norm1": norm_specs(cfg, L)}
+    s.update(_mixer_specs(cfg, L))
+    if cfg.is_moe and use_moe:
+        s["norm2"] = norm_specs(cfg, L)
+        s["moe"] = moe_mod.moe_specs(cfg, L)
+    elif cfg.d_ff > 0:
+        s["norm2"] = norm_specs(cfg, L)
+        s["mlp"] = mlp_specs(cfg, L)
+    return s
+
+
+def decoder_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    s: Dict[str, Any] = dict(embed_specs(cfg))
+    if cfg.first_dense_layers > 0:
+        dense_cfg = cfg.with_(n_experts=0)
+        s["dense_layers"] = _layer_specs(dense_cfg, cfg.first_dense_layers,
+                                         use_moe=False)
+        s["layers"] = _layer_specs(cfg, n_moe, use_moe=True)
+    else:
+        s["layers"] = _layer_specs(cfg, cfg.n_layers, use_moe=cfg.is_moe)
+    s["final_norm"] = norm_specs(cfg)
+    return s
+
+
+# ------------------------------------------------------------------ layer
+
+
+def _layer_train(cfg: ModelConfig, mesh: Optional[Mesh], use_moe: bool,
+                 x: jax.Array, pl: Dict) -> jax.Array:
+    dp = dp_axes(mesh)
+    h = apply_norm(cfg, pl["norm1"], x)
+    if cfg.family == "hybrid":
+        a = attn.attn_train(cfg, pl["attn"], h)
+        s = ssm_mod.ssm_train(cfg, pl["ssm"], h)
+        mix = 0.5 * (a * pl["alpha_attn"] + s * pl["alpha_ssm"])
+    elif cfg.has_ssm:
+        mix = ssm_mod.ssm_train(cfg, pl["ssm"], h)
+    else:
+        mix = attn.attn_train(cfg, pl["attn"], h)
+    x = x + mix
+    x = constrain(x, mesh, _residual_spec(cfg, mesh))
+    if use_moe and cfg.is_moe:
+        x = x + moe_mod.moe_apply(cfg, pl["moe"], apply_norm(cfg, pl["norm2"], x),
+                                  mesh=mesh)
+    elif cfg.d_ff > 0:
+        x = x + mlp_apply(cfg, pl["mlp"], apply_norm(cfg, pl["norm2"], x))
+    return constrain(x, mesh, _residual_spec(cfg, mesh))
+
+
+def _scan_stack(cfg: ModelConfig, mesh, use_moe, x, stacked):
+    fn = functools.partial(_layer_train, cfg, mesh, use_moe)
+
+    def body(carry, pl):
+        return fn(carry, pl), None
+
+    body = _remat(cfg, body)
+    L = jax.tree.leaves(stacked)[0].shape[0]
+    x, _ = jax.lax.scan(body, x, stacked, unroll=_unroll(cfg, L))
+    return x
+
+
+# ---------------------------------------------------------------- forward
+
+
+def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            mesh: Optional[Mesh] = None) -> jax.Array:
+    """Training forward: tokens (B, S) -> logits (B, S, Vp)."""
+    dp = dp_axes(mesh)
+    x = embed_apply(params, tokens).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, mesh, P(dp if dp else None, None, None))
+    if cfg.first_dense_layers > 0:
+        dense_cfg = cfg.with_(n_experts=0)
+        x = _scan_stack(dense_cfg, mesh, False, x, params["dense_layers"])
+    x = _scan_stack(cfg, mesh, cfg.is_moe, x, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed_apply(cfg, params, x)
+    return constrain(logits, mesh, P(dp if dp else None, None, "model"))
+
+
+# ------------------------------------------------------------------ cache
+
+
+def _layer_cache(cfg: ModelConfig, B: int, cache_len: int, dtype) -> Dict:
+    c: Dict[str, Any] = {}
+    if cfg.has_attention:
+        c["attn"] = attn.init_attn_cache(cfg, B, cache_len, dtype)
+    if cfg.has_ssm:
+        c["ssm"] = ssm_mod.init_ssm_cache(cfg, B, dtype)
+    return c
+
+
+def _stack_cache(cache: Dict, L: int) -> Dict:
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy()
+                        if L else a, cache)
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    if cfg.first_dense_layers > 0:
+        out["dense"] = _stack_cache(
+            _layer_cache(cfg.with_(n_experts=0), B, cache_len, dt),
+            cfg.first_dense_layers)
+        out["layers"] = _stack_cache(_layer_cache(cfg, B, cache_len, dt), n_moe)
+    else:
+        out["layers"] = _stack_cache(_layer_cache(cfg, B, cache_len, dt),
+                                     cfg.n_layers)
+    return out
+
+
+# ---------------------------------------------------------------- prefill
+
+
+def _layer_prefill(cfg, mesh, use_moe, x, pl):
+    dp = dp_axes(mesh)
+    h = apply_norm(cfg, pl["norm1"], x)
+    new_c: Dict[str, Any] = {}
+    if cfg.family == "hybrid":
+        a, ca = attn.attn_prefill(cfg, pl["attn"], h)
+        s, cs = ssm_mod.ssm_prefill(cfg, pl["ssm"], h)
+        mix = 0.5 * (a * pl["alpha_attn"] + s * pl["alpha_ssm"])
+        new_c = {"attn": ca, "ssm": cs}
+    elif cfg.has_ssm:
+        mix, cs = ssm_mod.ssm_prefill(cfg, pl["ssm"], h)
+        new_c = {"ssm": cs}
+    else:
+        mix, ca = attn.attn_prefill(cfg, pl["attn"], h)
+        new_c = {"attn": ca}
+    x = x + mix
+    x = constrain(x, mesh, _residual_spec(cfg, mesh))
+    if use_moe and cfg.is_moe:
+        x = x + moe_mod.moe_apply(cfg, pl["moe"], apply_norm(cfg, pl["norm2"], x),
+                                  mesh=mesh)
+    elif cfg.d_ff > 0:
+        x = x + mlp_apply(cfg, pl["mlp"], apply_norm(cfg, pl["norm2"], x))
+    return constrain(x, mesh, _residual_spec(cfg, mesh)), new_c
+
+
+def _scan_prefill(cfg, mesh, use_moe, x, stacked):
+    fn = functools.partial(_layer_prefill, cfg, mesh, use_moe)
+
+    def body(carry, pl):
+        x2, c = fn(carry, pl)
+        return x2, c
+
+    body = _remat(cfg, body)
+    L = jax.tree.leaves(stacked)[0].shape[0]
+    return jax.lax.scan(body, x, stacked, unroll=_unroll(cfg, L))
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            cache_len: int, mesh: Optional[Mesh] = None
+            ) -> Tuple[jax.Array, Dict]:
+    """Process the prompt; returns (logits for last position, cache).
+
+    The cache is padded/relaid to ``cache_len`` slots.
+    """
+    B, S = tokens.shape
+    dp = dp_axes(mesh)
+    x = embed_apply(params, tokens).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, mesh, P(dp if dp else None, None, None))
+    cache: Dict[str, Any] = {"pos": jnp.array(S, jnp.int32)}
+    if cfg.first_dense_layers > 0:
+        x, cd = _scan_prefill(cfg.with_(n_experts=0), mesh, False, x,
+                              params["dense_layers"])
+        cache["dense"] = _pad_cache(cfg.with_(n_experts=0), cd, S, cache_len)
+        x, cl = _scan_prefill(cfg, mesh, True, x, params["layers"])
+        cache["layers"] = _pad_cache(cfg, cl, S, cache_len)
+    else:
+        x, cl = _scan_prefill(cfg, mesh, cfg.is_moe, x, params["layers"])
+        cache["layers"] = _pad_cache(cfg, cl, S, cache_len)
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+    logits = unembed_apply(cfg, params, x)
+    return logits, cache
+
+
+def _pad_cache(cfg: ModelConfig, c: Dict, S: int, cache_len: int) -> Dict:
+    """Grow prefill caches (seq dim S or ring W) to the serving cache_len."""
+    def grow(path_a):
+        def g(a):
+            return a
+        return g
+
+    def pad_leaf(a, target_len, axis):
+        pad = target_len - a.shape[axis]
+        if pad <= 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        if a.dtype == jnp.int32:
+            return jnp.pad(a, widths, constant_values=-1)
+        return jnp.pad(a, widths)
+
+    out = dict(c)
+    if "attn" in c:
+        ac = dict(c["attn"])
+        if cfg.attn_type == "mla":
+            ac["ckv"] = pad_leaf(ac["ckv"], cache_len, 2)
+            ac["kr"] = pad_leaf(ac["kr"], cache_len, 2)
+        else:
+            W = min(cfg.window, cache_len) if cfg.window else cache_len
+            ac["k"] = pad_leaf(ac["k"], W, 2)
+            ac["v"] = pad_leaf(ac["v"], W, 2)
+            ac["kpos"] = pad_leaf(ac["kpos"], W, 1)
+        out["attn"] = ac
+    return out
+
+
+# ----------------------------------------------------------------- decode
+
+
+def _layer_decode(cfg, mesh, use_moe, x, pl, cl, pos):
+    h = apply_norm(cfg, pl["norm1"], x)
+    new_c: Dict[str, Any] = {}
+    if cfg.family == "hybrid":
+        a, ca = attn.attn_decode(cfg, pl["attn"], h, cl["attn"], pos)
+        s, cs = ssm_mod.ssm_decode(cfg, pl["ssm"], h, cl["ssm"])
+        mix = 0.5 * (a * pl["alpha_attn"] + s * pl["alpha_ssm"])
+        new_c = {"attn": ca, "ssm": cs}
+    elif cfg.has_ssm:
+        mix, cs = ssm_mod.ssm_decode(cfg, pl["ssm"], h, cl["ssm"])
+        new_c = {"ssm": cs}
+    else:
+        mix, ca = attn.attn_decode(cfg, pl["attn"], h, cl["attn"], pos)
+        new_c = {"attn": ca}
+    x = x + mix
+    if use_moe and cfg.is_moe:
+        x = x + moe_mod.moe_apply(cfg, pl["moe"], apply_norm(cfg, pl["norm2"], x),
+                                  mesh=mesh)
+    elif cfg.d_ff > 0:
+        x = x + mlp_apply(cfg, pl["mlp"], apply_norm(cfg, pl["norm2"], x))
+    return x, new_c
+
+
+def decode(cfg: ModelConfig, params: Dict, cache: Dict, tokens: jax.Array,
+           mesh: Optional[Mesh] = None) -> Tuple[jax.Array, Dict]:
+    """One decode step.  tokens: (B, 1) -> (logits (B, 1, Vp), new cache)."""
+    dp = dp_axes(mesh)
+    pos = cache["pos"]
+    x = embed_apply(params, tokens).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, mesh, P(dp if dp else None, None, None))
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    def make_body(c, use_moe):
+        def body(carry, xs):
+            pl, cl = xs
+            x2, nc = _layer_decode(c, mesh, use_moe, carry, pl, cl, pos)
+            return x2, nc
+        return body
+
+    if cfg.first_dense_layers > 0:
+        dense_cfg = cfg.with_(n_experts=0)
+        x, nd = jax.lax.scan(make_body(dense_cfg, False), x,
+                             (params["dense_layers"], cache["dense"]),
+                             unroll=_unroll(cfg, cfg.first_dense_layers))
+        new_cache["dense"] = nd
+        x, nl = jax.lax.scan(make_body(cfg, True), x,
+                             (params["layers"], cache["layers"]),
+                             unroll=_unroll(cfg, cfg.n_layers
+                                            - cfg.first_dense_layers))
+        new_cache["layers"] = nl
+    else:
+        x, nl = jax.lax.scan(make_body(cfg, cfg.is_moe), x,
+                             (params["layers"], cache["layers"]),
+                             unroll=_unroll(cfg, cfg.n_layers))
+        new_cache["layers"] = nl
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed_apply(cfg, params, x)
+    logits = constrain(logits, mesh, P(dp if dp else None, None, "model"))
+    return logits, new_cache

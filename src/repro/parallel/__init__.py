@@ -1,0 +1,3 @@
+from . import collective_planner, compression, sharding
+
+__all__ = ["collective_planner", "compression", "sharding"]

@@ -1,0 +1,128 @@
+"""COMET-driven collective planning (DESIGN.md §2, model-level use).
+
+The paper's central case study — distSM vs SM for a softmax whose reduction
+dimension is sharded — occurs in this framework wherever the vocabulary-
+sharded logits feed the cross-entropy loss (every training cell) and in
+TP/flash-decoding attention merges.  This module:
+
+1. ``plan_softmax_strategy``: costs both mappings with the COMET collective
+   model (Eq. 3/4) on the actual mesh/tensor shapes and returns the
+   cheaper one — 'dist' (two All-Reduces over M×1 stats, operate in place)
+   or 'gather' (All-Gather the sharded rows, compute locally).
+2. ``sharded_softmax_xent``: shard_map implementation of BOTH strategies —
+   the framework's explicit-collective realization of Fig. 4(c).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.collectives import collective_cost, noc_latency
+from repro.core.hardware import tpu_v5e
+
+F32 = jnp.float32
+
+__all__ = ["plan_softmax_strategy", "sharded_softmax_xent"]
+
+
+@functools.lru_cache(maxsize=1024)
+def plan_softmax_strategy(rows: int, cols: int, participants: int,
+                          dtype_bytes: int = 2) -> str:
+    """COMET Eq. 3/4 comparison of the two softmax collective mappings.
+
+    rows=M (tokens), cols=N (sharded softmax dim, e.g. padded vocab),
+    participants=#shards on the reduction axis.
+    distSM: 2 × AllReduce of (rows,) stats.
+    SM/gather: AllGather of (rows, cols/P) shards (then local softmax).
+    """
+    if participants <= 1:
+        return "dist"
+    arch = tpu_v5e()
+    noc = arch.cluster_noc
+
+    def lat(col_type: str, dv: float) -> float:
+        cc = collective_cost(col_type, dv, participants, noc)
+        return cc.volume_bytes / noc.channel_bandwidth + noc_latency(cc, noc)
+
+    dist = 2.0 * lat("AllReduce", rows * 4)           # f32 stats (max, sum)
+    gather = lat("AllGather", rows * cols * dtype_bytes)
+    return "dist" if dist <= gather else "gather"
+
+
+def sharded_softmax_xent(h: jax.Array, unembed: jax.Array,
+                         labels: jax.Array, mesh: Mesh, *,
+                         real_vocab: int,
+                         strategy: str = "auto") -> jax.Array:
+    """Cross-entropy over vocab-sharded logits with explicit collectives.
+
+    h: (B, S, D) sharded over dp; unembed: (D, Vp) sharded over 'model';
+    labels: (B, S).  Returns the scalar mean NLL.  'dist' computes the
+    global max/logsumexp via All-Reduces of per-shard statistics (the
+    paper's distSM); 'gather' All-Gathers the logit shards and computes
+    locally (the paper's SM).  'auto' asks the COMET planner.
+    """
+    B, S, D = h.shape
+    Vp = unembed.shape[1]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    mdl = "model"
+    P_model = mesh.shape[mdl]
+    if strategy == "auto":
+        local_rows = (B * S) // max(1, int(np.prod([mesh.shape[a] for a in dp])) if dp else 1)
+        strategy = plan_softmax_strategy(local_rows, Vp, P_model)
+
+    v_local = Vp // P_model
+
+    def _local_logits(h_l, w_l):
+        return (h_l.reshape(-1, D) @ w_l).astype(F32)        # (T_l, V_l)
+
+    def _mask_pad(lg, v0):
+        idx = v0 + jnp.arange(lg.shape[-1])
+        return jnp.where(idx[None, :] >= real_vocab, -1e30, lg)
+
+    def dist_fn(h_l, w_l, y_l):
+        lg = _local_logits(h_l, w_l)
+        v0 = jax.lax.axis_index(mdl) * v_local
+        lg = _mask_pad(lg, v0)
+        # stability max is gradient-free (pmax has no AD rule; the exact
+        # gradient flows through the logsumexp below regardless of m)
+        m = jax.lax.stop_gradient(
+            jax.lax.pmax(jax.lax.stop_gradient(lg.max(-1)), mdl))  # CO_1^0
+        e = jnp.exp(lg - m[:, None])
+        s = jax.lax.psum(e.sum(-1), mdl)                     # CO_1^1: AR(add)
+        y = y_l.reshape(-1)
+        in_shard = (y >= v0) & (y < v0 + v_local)
+        safe = jnp.clip(y - v0, 0, v_local - 1)
+        ll_local = jnp.where(in_shard,
+                             jnp.take_along_axis(lg, safe[:, None], 1)[:, 0],
+                             0.0)
+        ll = jax.lax.psum(ll_local, mdl)
+        nll = (jnp.log(s) + m - ll).sum()
+        total = jax.lax.psum(jnp.float32(y.shape[0]), dp) if dp else y.shape[0]
+        return jax.lax.psum(nll, dp) / total if dp else nll / total
+
+    def gather_fn(h_l, w_l, y_l):
+        lg = _local_logits(h_l, w_l)
+        lg_full = jax.lax.all_gather(lg, mdl, axis=1, tiled=True)  # CO: AG
+        lg_full = _mask_pad(lg_full, 0)
+        m = lg_full.max(-1)
+        s = jnp.exp(lg_full - m[:, None]).sum(-1)
+        y = y_l.reshape(-1)
+        ll = jnp.take_along_axis(lg_full, y[:, None], 1)[:, 0]
+        nll = (jnp.log(s) + m - ll).sum()
+        total = jax.lax.psum(jnp.float32(y.shape[0]), dp) if dp else y.shape[0]
+        return jax.lax.psum(nll, dp) / total if dp else nll / total
+
+    fn = dist_fn if strategy == "dist" else gather_fn
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(None, mdl), P(dp_spec, None)),
+        out_specs=P(),
+        check_rep=False,
+    )(h, unembed, labels)

@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules → NamedShardings.
+
+Every parameter carries logical axis names (models/param.py); this module
+maps them onto the production mesh: tensor-parallel axes (vocab / heads /
+ff / experts / inner) shard over ``model``; batch shards over
+``(pod, data)``; anything non-divisible falls back to replication (e.g.
+MQA's single KV head, Hymba's 25 heads — XLA handles uneven sharding for
+activations, but parameter shards must divide evenly for checkpoint
+round-trips, so we replicate instead).
+
+ZeRO-1: optimizer moments additionally shard over the data axes on the
+largest divisible dimension not already sharded (reduce-scatter/all-gather
+pattern at the XLA level).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["LOGICAL_RULES", "spec_for", "param_shardings", "zero1_shardings",
+           "batch_spec", "batch_sharding", "cache_shardings", "dp_size"]
+
+# logical axis -> mesh axis (None = replicate)
+LOGICAL_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "inner": "model",
+    "embed": None,       # residual stream replicated (seq-parallel is a knob)
+    "layer": None,
+    None: None,
+}
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             mesh: Mesh) -> P:
+    """PartitionSpec for one param: apply LOGICAL_RULES with divisibility
+    fallback (replicate non-divisible dims)."""
+    entries = []
+    for ax, dim in zip(axes, shape):
+        mesh_ax = LOGICAL_RULES.get(ax)
+        if mesh_ax is not None and mesh_ax in mesh.axis_names \
+                and dim % mesh.shape[mesh_ax] == 0:
+            entries.append(mesh_ax)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(axes_tree, abstract_tree, mesh: Mesh):
+    """NamedSharding pytree for params."""
+    return jax.tree.map(
+        lambda ax, ab: NamedSharding(mesh, spec_for(ax, ab.shape, mesh)),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def zero1_spec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+               mesh: Mesh) -> P:
+    """Param spec + data-axis sharding on the largest free divisible dim."""
+    base = list(spec_for(axes, shape, mesh))
+    base += [None] * (len(shape) - len(base))
+    dp = dp_axes(mesh)
+    if not dp:
+        return P(*base)
+    n = dp_size(mesh)
+    # largest unsharded dim divisible by the full dp size
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if base[i] is None and shape[i] % n == 0 and shape[i] >= n:
+            base[i] = dp if len(dp) > 1 else dp[0]
+            break
+    while base and base[-1] is None:
+        base.pop()
+    return P(*base)
+
+
+def zero1_shardings(axes_tree, abstract_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda ax, ab: NamedSharding(mesh, zero1_spec(ax, ab.shape, mesh)),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    dp = dp_axes(mesh)
+    if not dp or batch % dp_size(mesh) != 0:
+        # decode long_500k (batch=1): replicate
+        usable = []
+        n = 1
+        for a in dp:
+            if batch % (n * mesh.shape[a]) == 0:
+                usable.append(a)
+                n *= mesh.shape[a]
+        dp = tuple(usable)
+    if not dp:
+        return P()
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def batch_sharding(mesh: Mesh, batch: int, ndim: int) -> NamedSharding:
+    bs = batch_spec(mesh, batch)
+    tail = (None,) * (ndim - 1)
+    entries = tuple(bs) + tail if len(bs) else (None,) * ndim
+    return NamedSharding(mesh, P(*entries[:ndim]))
+
+
+def cache_shardings(cache_abstract, mesh: Mesh, batch: int):
+    """KV/SSM cache shardings (path-aware).  Layout is (L, B, ...) for
+    layer-stacked entries.  Batch shards over dp.  Attention caches:
+    kv-heads over ``model`` when divisible, otherwise the **sequence** dim
+    shards over ``model`` — GSPMD then realizes the paper's distSM mapping
+    for the decode softmax (stats All-Reduces across the seq shards).
+    The MLA latent cache always shards seq over model (its feature dim is
+    the contraction rank)."""
+    bs = batch_spec(mesh, batch)
+    b_ax = bs[0] if len(bs) else None
+    m = mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1
+
+    def one(path, ab):
+        name = jax.tree_util.keystr(path)
+        shp = ab.shape
+        entries = [None] * len(shp)
+        # batch dim: index 1 for stacked (L, B, ...) entries
+        for i, d in enumerate(shp[:2]):
+            if d == batch:
+                entries[i] = b_ax
+                break
+        if m > 1 and len(shp) >= 3:
+            if ("'k'" in name or "'v'" in name) and len(shp) == 5:
+                L_, B_, S_, H_, hd_ = shp
+                if H_ % m == 0:
+                    entries[3] = "model"          # kv-heads TP
+                elif S_ % m == 0:
+                    entries[2] = "model"          # seq-sharded -> distSM
+            elif "'ckv'" in name or "'kr'" in name:
+                if shp[2] % m == 0:
+                    entries[2] = "model"          # MLA latent: seq over model
+            elif "'conv'" in name and shp[-1] % m == 0:
+                entries[-1] = "model"             # conv channels TP
+            elif "'state'" in name and shp[2] % m == 0:
+                entries[2] = "model"              # ssm heads TP
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)

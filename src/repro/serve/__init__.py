@@ -1,0 +1,4 @@
+from . import engine
+from .engine import Request, ServeEngine
+
+__all__ = ["engine", "Request", "ServeEngine"]

@@ -1,0 +1,106 @@
+"""Batched serving engine: prefill + greedy decode with fixed-shape jitted
+steps and slot-based continuous batching (finished sequences are replaced
+from the request queue without recompiling — the decode step shape never
+changes)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..models.model import Model
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed batch of decode slots; requests stream through them."""
+
+    def __init__(self, model: Model, params, *, batch_size: int,
+                 cache_len: int, prompt_len: int,
+                 mesh: Optional[Mesh] = None):
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.prompt_len = prompt_len
+        cfg = model.cfg
+
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len, mesh))
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode(p, c, t, mesh),
+            donate_argnums=(1,))
+        self.stats: Dict[str, float] = {"prefill_calls": 0, "decode_steps": 0,
+                                        "tokens_out": 0}
+
+    # ------------------------------------------------------------- serving
+    def _pad_prompts(self, reqs: Sequence[Request]) -> np.ndarray:
+        toks = np.zeros((self.B, self.prompt_len), np.int32)
+        for i, r in enumerate(reqs):
+            t = r.prompt[-self.prompt_len:]
+            toks[i, -len(t):] = t          # right-aligned
+        return toks
+
+    def run(self, requests: List[Request], *, max_steps: int = 10_000
+            ) -> List[Request]:
+        """Process all requests with continuous slot reuse."""
+        queue = list(requests)
+        active: List[Optional[Request]] = [None] * self.B
+
+        def refill() -> bool:
+            changed = False
+            for i in range(self.B):
+                if active[i] is None and queue:
+                    active[i] = queue.pop(0)
+                    changed = True
+            return changed
+
+        refill()
+        batch = {"tokens": jnp.asarray(self._pad_prompts(
+            [r for r in active if r] + []))}
+        if self.model.cfg.is_encdec:
+            Se = max(1, self.prompt_len // self.model.cfg.enc_ratio)
+            batch["src_embeds"] = jnp.zeros((self.B, Se, self.model.cfg.d_model),
+                                            jnp.float32)
+        logits, cache = self._prefill(self.params, batch)
+        self.stats["prefill_calls"] += 1
+        last = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)
+
+        for step in range(max_steps):
+            if all(r is None or r.done for r in active) and not queue:
+                break
+            tok = last[:, None].astype(jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok)
+            self.stats["decode_steps"] += 1
+            last = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)
+            host = np.asarray(last)
+            for i, r in enumerate(active):
+                if r is None or r.done:
+                    continue
+                r.output.append(int(host[i]))
+                self.stats["tokens_out"] += 1
+                if len(r.output) >= r.max_new_tokens or \
+                        (r.eos_id is not None and host[i] == r.eos_id):
+                    r.done = True
+                    active[i] = None       # slot freed (continuous batching)
+            refill()
+        done = [r for r in requests]
+        return done

@@ -1,0 +1,3 @@
+from . import checkpoint, data, elastic, optimizer, train_step
+
+__all__ = ["checkpoint", "data", "elastic", "optimizer", "train_step"]

@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: atomic manifest + per-leaf npy shards,
+keep-last-k retention, async writer thread, and elastic restore (reshard a
+checkpoint onto a different mesh/device count).
+
+Layout:
+    <dir>/step_000123/
+        manifest.json      # treedef, shapes, dtypes, step, extra metadata
+        leaf_00000.npy ... # one file per pytree leaf (host-gathered)
+    <dir>/LATEST           # atomic pointer file
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.json"
+_LATEST = "LATEST"
+
+
+def _flatten_with_names(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return named, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *,
+                    extra: Optional[Dict] = None, keep: int = 3) -> str:
+    """Synchronous atomic save; returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    named, _ = _flatten_with_names(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (name, leaf) in enumerate(named):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"name": name, "file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    latest_tmp = os.path.join(ckpt_dir, _LATEST + ".tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, _LATEST))
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, _LATEST)
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, _MANIFEST)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_like``.  ``shardings`` (a
+    matching pytree of NamedShardings) enables **elastic restore**: the
+    host arrays are placed onto whatever mesh the shardings reference —
+    growing or shrinking the device count between runs."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+
+    def _load(entry):
+        arr = np.load(os.path.join(path, entry["file"]))
+        want = np.dtype(entry["dtype"])     # ml_dtypes names resolve here
+        if arr.dtype != want:
+            arr = arr.view(want)            # bf16 round-trips as void16
+        return arr
+
+    leaves = [_load(e) for e in manifest["leaves"]]
+    flat_like, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(flat_like) == len(leaves), (len(flat_like), len(leaves))
+    if shardings is not None:
+        flat_sh, _ = jax.tree_util.tree_flatten(shardings)
+        leaves = [jax.device_put(a, s) for a, s in zip(leaves, flat_sh)]
+    else:
+        leaves = [jax.device_put(a) for a in leaves]
+    return (jax.tree_util.tree_unflatten(treedef, leaves), step,
+            manifest.get("extra", {}))
+
+
+class AsyncCheckpointer:
+    """Background writer thread: training never blocks on I/O.  ``save``
+    snapshots to host memory synchronously (cheap) and enqueues the disk
+    write; ``wait`` drains the queue (call before exit)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self.errors: List[str] = []
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, extra=extra,
+                                keep=self.keep)
+            except Exception as e:  # noqa: BLE001 — surfaced via .errors
+                self.errors.append(f"step {step}: {e}")
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree, extra))
+
+    def wait(self) -> None:
+        self._q.put(None)
+        self._worker.join()

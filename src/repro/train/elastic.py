@@ -1,0 +1,75 @@
+"""Elastic scaling + straggler mitigation.
+
+* :func:`remesh` — reshard a live pytree (or a restored checkpoint) onto a
+  new mesh: the recovery path after losing (or gaining) data-parallel
+  replicas.  Combined with checkpoint.restore_checkpoint(shardings=...)
+  this gives checkpoint-elastic restarts; combined with device_put it
+  gives in-job resharding.
+* :class:`StragglerMonitor` — per-step wall-time EMA; flags steps slower
+  than ``threshold``× the EMA (the training driver can then skip the
+  all-reduce for that replica / re-dispatch data, and the monitor records
+  the event for the ops log).
+* :func:`shrink_mesh` — drop failed hosts' devices and rebuild the largest
+  rectangular (data, model) mesh that still fits.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+__all__ = ["remesh", "shrink_mesh", "StragglerMonitor"]
+
+
+def remesh(tree, shardings) -> Any:
+    """device_put every leaf onto the sharding from the (matching) pytree —
+    works across meshes of different sizes/shapes."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        tree, shardings)
+
+
+def shrink_mesh(failed_devices: int, *, model_parallel: int,
+                devices: Optional[Sequence] = None) -> Mesh:
+    """Rebuild a (data, model) mesh after losing ``failed_devices``:
+    model-parallel width is preserved (TP shards are not divisible);
+    whole data-parallel replicas are dropped."""
+    devs = list(devices if devices is not None else jax.devices())
+    usable = len(devs) - failed_devices
+    data = usable // model_parallel
+    if data < 1:
+        raise RuntimeError(
+            f"cannot keep model_parallel={model_parallel} with "
+            f"{usable} devices")
+    keep = devs[: data * model_parallel]
+    arr = np.array(keep).reshape(data, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0
+    decay: float = 0.9
+    ema: Optional[float] = None
+    events: List[dict] = field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> bool:
+        """Returns True if this step was a straggler."""
+        dt = time.monotonic() - (self._t0 or time.monotonic())
+        is_straggler = self.ema is not None and dt > self.threshold * self.ema
+        if is_straggler:
+            self.events.append({"step": step, "duration_s": dt,
+                                "ema_s": self.ema})
+        # EMA excludes straggler steps (they would poison the baseline)
+        if not is_straggler:
+            self.ema = dt if self.ema is None else \
+                self.decay * self.ema + (1 - self.decay) * dt
+        return is_straggler

@@ -1,0 +1,101 @@
+"""AdamW with global-norm clipping, cosine LR schedule, optional int8
+gradient compression with error feedback, and ZeRO-1 state sharding
+(opt moments sharded over the data axes — see parallel/sharding.py).
+
+Implemented from scratch (no optax dependency); fp32 moments over bf16
+params (mixed-precision master-less AdamW: the update is computed in f32
+and cast back).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.compression import compress_with_feedback
+
+F32 = jnp.float32
+
+__all__ = ["OptConfig", "OptState", "init_opt_state", "adamw_update",
+           "cosine_lr", "global_norm"]
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    grad_compression: bool = False      # int8 + error feedback
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # () int32
+    m: Any                   # pytree f32, like params
+    v: Any                   # pytree f32, like params
+    err: Any                 # error-feedback pytree (or empty tuple)
+
+
+def init_opt_state(params, *, compression: bool = False) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    m = jax.tree.map(zeros, params)
+    v = jax.tree.map(zeros, params)
+    err = jax.tree.map(zeros, params) if compression else None
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v, err=err)
+
+
+def cosine_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(F32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, cfg.warmup_steps))
+    t = jnp.clip((s - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, params, grads, state: OptState
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(F32) * scale, grads)
+
+    if cfg.grad_compression and state.err is not None:
+        pairs = jax.tree.map(compress_with_feedback, grads, state.err)
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_err = state.err
+
+    step = state.step + 1
+    lr = cosine_lr(cfg, state.step)
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_m, new_v, new_err), metrics

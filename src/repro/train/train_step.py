@@ -1,0 +1,90 @@
+"""Train-step factory: loss + grad + AdamW update as one donated jit.
+
+Supports microbatch gradient accumulation (lax.scan over µbatches — keeps
+the collective/compute overlap window open for the XLA latency-hiding
+scheduler) and the COMET-planned explicit-collective loss
+(``cfg.softmax_strategy``: 'dist'/'gather'/'auto' via the planner;
+'gspmd' leaves the choice to XLA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..models.config import ModelConfig
+from ..models.layers import cross_entropy_loss
+from ..models.model import Model
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["TrainState", "make_train_step", "make_loss_fn"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def make_loss_fn(model: Model, mesh: Optional[Mesh],
+                 use_planner_loss: bool = False):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        if use_planner_loss and mesh is not None and not cfg.tie_embeddings \
+                and not cfg.is_encdec:
+            # explicit-collective loss: forward to hidden states, then the
+            # COMET-planned sharded softmax-xent (dist vs gather).
+            from ..models import transformer
+            from ..models.layers import apply_norm, embed_apply
+            from ..parallel.collective_planner import sharded_softmax_xent
+            x = embed_apply(params, batch["tokens"]).astype(jnp.dtype(cfg.dtype))
+            if cfg.first_dense_layers > 0:
+                x = transformer._scan_stack(cfg.with_(n_experts=0), mesh,
+                                            False, x, params["dense_layers"])
+            x = transformer._scan_stack(cfg, mesh, cfg.is_moe, x,
+                                        params["layers"])
+            x = apply_norm(cfg, params["final_norm"], x)
+            return sharded_softmax_xent(
+                x, params["unembed"], batch["labels"], mesh,
+                real_vocab=cfg.vocab_size, strategy=cfg.softmax_strategy
+                if cfg.softmax_strategy != "gspmd" else "auto")
+        return model.loss(params, batch, mesh)
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    mesh: Optional[Mesh] = None, *,
+                    microbatches: int = 1,
+                    use_planner_loss: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(model, mesh, use_planner_loss)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, b):
+                l, g = jax.value_and_grad(loss_fn)(state.params, b)
+                return (carry[0] + l, jax.tree.map(jnp.add, carry[1], g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0), zero_g), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+
+        new_params, new_opt, metrics = adamw_update(opt_cfg, state.params,
+                                                    grads, state.opt)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

@@ -1,0 +1,127 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gemm_layernorm, gemm_softmax
+from repro.core.collectives import collective_cost
+from repro.core.hardware import cloud, edge
+from repro.core.ir import MappingSpec, evaluate_mapping
+from repro.core.mapping import Loop, TileNode, Tiling
+
+DIM = st.sampled_from([1, 4, 64, 128, 256, 512, 1024])
+TILES = st.sampled_from([1, 2, 4, 8, 16])
+WL = st.sampled_from([gemm_softmax, gemm_layernorm])
+VARIANT = st.sampled_from(["unfused", "fused_epilogue", "fused_std",
+                           "fused_dist"])
+
+
+@settings(max_examples=60, deadline=None)
+@given(M=DIM, N=DIM, K=st.sampled_from([64, 128]), m_tiles=TILES,
+       k_tiles=st.sampled_from([1, 2]), wl=WL, variant=VARIANT,
+       gran=st.sampled_from(["tile", "stats"]),
+       sched=st.sampled_from(["sequential", "pipelined"]))
+def test_cost_model_invariants(M, N, K, m_tiles, k_tiles, wl, variant, gran,
+                               sched):
+    """Every evaluated mapping has nonnegative finite latency/energy; the
+    breakdown sums to <= total latency (CS/OS are additive parts);
+    energy breakdown sums to the total."""
+    co = wl(M, N, K)
+    arch = edge()
+    r = evaluate_mapping(co, arch, MappingSpec(
+        variant=variant, m_tiles=m_tiles, k_tiles=k_tiles,
+        collective_gran=gran, schedule=sched))
+    assert math.isfinite(r.latency) and r.latency > 0
+    assert math.isfinite(r.energy_pj) and r.energy_pj > 0
+    assert sum(r.cost.energy_breakdown.values()) == \
+        __import__("pytest").approx(r.energy_pj, rel=1e-6)
+    assert all(v >= 0 for v in r.cost.lat_breakdown.values())
+    assert all(v >= 0 for v in r.cost.energy_breakdown.values())
+
+
+@settings(max_examples=60, deadline=None)
+@given(dv=st.floats(min_value=1.0, max_value=1e9),
+       p=st.sampled_from([2, 4, 8, 16, 64, 256]),
+       col=st.sampled_from(["AllReduce", "AllGather", "ReduceScatter",
+                            "Gather", "Broadcast", "AllToAll"]))
+def test_collective_cost_properties(dv, p, col):
+    """Volume scales linearly in DV; is monotone in participants; hops are
+    positive."""
+    noc = cloud().cluster_noc
+    c1 = collective_cost(col, dv, p, noc)
+    c2 = collective_cost(col, 2 * dv, p, noc)
+    assert c2.volume_bytes == __import__("pytest").approx(
+        2 * c1.volume_bytes, rel=1e-9)
+    assert c1.hops >= 1
+    assert c1.volume_bytes < dv * 2 + 1e-6  # never exceeds 2*DV (AR bound)
+
+
+@settings(max_examples=50, deadline=None)
+@given(size=st.integers(min_value=1, max_value=10_000),
+       t_gb=TILES, t_ob=TILES, sp=st.sampled_from([1, 2, 4]))
+def test_tiling_consistency(size, t_gb, t_ob, sp):
+    """tile_below chains: leaf tile * all factors >= dim size, and
+    tile_at(GB) == size (root granularity)."""
+    tiling = Tiling({"X": size},
+                    temporal={"GB": {"X": t_gb}, "OB": {"X": t_ob}},
+                    spatial={"GB": {"X": sp}})
+    leaf = tiling.leaf_tile("X")
+    assert leaf * t_gb * t_ob * sp >= size
+    assert tiling.tile_at("X", "GB") == size
+    assert tiling.tile_below("X", "OB") == leaf
+
+
+@settings(max_examples=40, deadline=None)
+@given(factors=st.lists(st.sampled_from([1, 2, 4, 8]), min_size=1,
+                        max_size=4),
+       tensor_dims=st.sets(st.sampled_from(["M", "N", "K"]), min_size=1))
+def test_fetch_reuse_bounds(factors, tensor_dims):
+    """Fetches are between 1 and total iterations, and equal total
+    iterations when the innermost loop touches the tensor."""
+    dims = ["M", "N", "K", "L"]
+    loops = [Loop(dims[i % 4], f) for i, f in enumerate(factors)]
+    node = TileNode(level="GB", index=0, loops=loops)
+    fetches = node.tensor_fetches(tuple(tensor_dims))
+    total = 1
+    for f in factors:
+        total *= f
+    assert 1 <= fetches <= total
+    if loops[-1].dim in tensor_dims:
+        assert fetches == total
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       step=st.integers(min_value=0, max_value=10_000))
+def test_data_pipeline_deterministic(seed, step):
+    """Seekable determinism: same (seed, step) -> identical batch."""
+    import numpy as np
+    from repro.train.data import SyntheticLM
+    ds = SyntheticLM(vocab_size=997, seq_len=32, global_batch=4, seed=seed)
+    b1 = ds.batch(step)
+    b2 = SyntheticLM(vocab_size=997, seq_len=32, global_batch=4,
+                     seed=seed).batch(step)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["labels"], b2["labels"])
+    assert b1["tokens"].max() < 997
+    # labels are next-token shifted
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=st.sampled_from([(8,), (4, 16), (3, 5, 7)]),
+       scale=st.floats(min_value=1e-3, max_value=1e3))
+def test_int8_compression_error_feedback(shape, scale):
+    """Quantize-dequantize error is bounded by the step size, and error
+    feedback makes the two-step accumulated error smaller than naive."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.parallel.compression import compress_with_feedback, quantize_int8
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+    q, s = quantize_int8(g)
+    err = float(jnp.abs(q.astype(jnp.float32) * s - g).max())
+    assert err <= float(s) * 0.5 + 1e-6
+    dq, e = compress_with_feedback(g, jnp.zeros_like(g))
+    # feedback carries exactly the residual
+    assert float(jnp.abs((dq + e) - g).max()) < 1e-5 * max(1.0, scale)
