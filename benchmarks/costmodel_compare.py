@@ -19,7 +19,7 @@ from repro.core.cost import CostModel, NodeCost
 from repro.core.hardware import tileflow_like
 from repro.core.ir import MappingSpec, build_tree, evaluate_mapping
 from repro.core.mapping import CollectiveNode, ComputeNode, TileNode
-from repro.core.search import candidate_specs, _sample
+from repro.core.search import candidate_specs, parallel_map, _sample
 from repro.core.validate import validate_tree
 from repro.core.workload import CompoundOp, Operation, TensorSpec, gemm
 
@@ -77,32 +77,51 @@ def gemm_gemm(M: int, N: int, K: int, N2: int) -> CompoundOp:
     return co
 
 
-def single_op_compare(n_mappings: int = 1152) -> Dict:
-    """Fig 6(a,b): sweep mappings of one GEMM; compare latency models."""
-    arch = tileflow_like()
-    co = gemm(256, 1024, 256)
+def _unique_specs(cands, keyfn, n_draws: int):
+    """Deterministically sample distinct specs from the candidate space."""
     rng = random.Random(0)
-    cands = candidate_specs(co, arch, variants=["unfused"])
-    comet_l, steady_l = [], []
     seen = set()
-    for _ in range(20000):
-        if len(comet_l) >= n_mappings:
-            break
+    specs = []
+    for _ in range(n_draws):
         spec = _sample(rng, cands)
-        key = (spec.m_tiles, spec.k_tiles, spec.n_tiles, spec.schedule)
+        key = keyfn(spec)
         if key in seen:
             continue
         seen.add(key)
-        try:
-            root, tiling = build_tree(co, arch, spec)
-            if not validate_tree(root, arch, tiling, co.tensors):
-                continue
-            r = CostModel(arch, tiling, co.tensors).evaluate(root)
-            s = steady_state_latency(root, arch, tiling, co.tensors)
-        except (ValueError, KeyError):
-            continue
-        comet_l.append(r.latency)
-        steady_l.append(s)
+        specs.append(spec)
+    return specs
+
+
+def _compare_one(args):
+    """(comet latency, steady latency, comet energy) for one spec, or None
+    when the mapping is rejected."""
+    co, arch, spec = args
+    try:
+        root, tiling = build_tree(co, arch, spec)
+        if not validate_tree(root, arch, tiling, co.tensors):
+            return None
+        r = CostModel(arch, tiling, co.tensors).evaluate(root)
+        s = steady_state_latency(root, arch, tiling, co.tensors)
+    except (ValueError, KeyError):
+        return None
+    return (r.latency, s, r.energy_pj)
+
+
+def single_op_compare(n_mappings: int = 1152) -> Dict:
+    """Fig 6(a,b): sweep mappings of one GEMM; compare latency models.
+    The per-mapping model comparisons fan out over the parallel sweep
+    driver."""
+    arch = tileflow_like()
+    co = gemm(256, 1024, 256)
+    cands = candidate_specs(co, arch, variants=["unfused"])
+    specs = _unique_specs(
+        cands, lambda s: (s.m_tiles, s.k_tiles, s.n_tiles, s.schedule), 20000)
+    # scalar tree evaluations are GIL-bound -> process pool
+    rows = parallel_map(_compare_one, [(co, arch, s) for s in specs],
+                        executor="process")
+    rows = [r for r in rows if r is not None][:n_mappings]
+    comet_l = [r[0] for r in rows]
+    steady_l = [r[1] for r in rows]
     corr = _pearson(comet_l, steady_l)
     ratio = sum(c / max(s, 1e-12) for c, s in zip(comet_l, steady_l)) / len(comet_l)
     print(f"fig6ab_gemm_latency,{len(comet_l)},corr={corr:.3f};"
@@ -115,32 +134,18 @@ def compound_compare() -> Dict:
     intermediate reuse (higher energy) and dependency stalls (lower lat)."""
     arch = tileflow_like()
     co = gemm_gemm(256, 512, 256, 512)
-    rng = random.Random(0)
     cands = candidate_specs(co, arch, variants=["fused_dist"])
-    rows = []
-    seen = set()
-    for _ in range(5000):
-        if len(rows) >= 200:
-            break
-        spec = _sample(rng, cands)
-        key = (spec.m_tiles, spec.k_tiles, spec.n_tiles)
-        if key in seen:
-            continue
-        seen.add(key)
-        try:
-            root, tiling = build_tree(co, arch, spec)
-            if not validate_tree(root, arch, tiling, co.tensors):
-                continue
-            r = CostModel(arch, tiling, co.tensors).evaluate(root)
-            s_lat = steady_state_latency(root, arch, tiling, co.tensors)
-            # TileFlow-style energy: charge DRAM for the intermediate C as
-            # if it round-tripped (no reuse credit)
-            c_bytes = co.tensors["C"].size_bytes(co.dim_sizes)
-            tf_energy = r.energy_pj + 2 * c_bytes * (
-                arch.dram.read_energy_pj_per_byte)
-        except (ValueError, KeyError):
-            continue
-        rows.append((r.latency, s_lat, r.energy_pj, tf_energy))
+    specs = _unique_specs(
+        cands, lambda s: (s.m_tiles, s.k_tiles, s.n_tiles), 5000)
+    results = parallel_map(_compare_one, [(co, arch, s) for s in specs],
+                           executor="process")
+    # TileFlow-style energy: charge DRAM for the intermediate C as if it
+    # round-tripped (no reuse credit)
+    c_bytes = co.tensors["C"].size_bytes(co.dim_sizes)
+    tf_extra = 2 * c_bytes * arch.dram.read_energy_pj_per_byte
+    rows = [(lat, s_lat, en, en + tf_extra)
+            for r in results if r is not None
+            for (lat, s_lat, en) in [r]][:200]
     lat_corr = _pearson([x[0] for x in rows], [x[1] for x in rows])
     en_corr = _pearson([x[2] for x in rows], [x[3] for x in rows])
     lat_ratio = sum(x[0] / max(x[1], 1e-12) for x in rows) / len(rows)

@@ -13,7 +13,7 @@ from repro.core import (attention, flash_attention, gemm_layernorm,
                         gemm_softmax)
 from repro.core.hardware import cloud, edge
 from repro.core.ir import MappingSpec, evaluate_mapping
-from repro.core.search import search
+from repro.core.search import search_many
 
 # Tables I / II
 GEMMS_EDGE = [(1, 1024, 64), (1, 4096, 128), (256, 1024, 128),
@@ -35,18 +35,28 @@ def _geomean(xs: List[float]) -> float:
     return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
 
 
+VARIANTS = ("unfused", "fused_epilogue", "fused_std", "fused_dist")
+
+
 def fusion_comparison(workload_fn, label: str, paper_claim: float) -> Dict:
-    """Figs 10/11: latency & energy of each fusion mapping vs unfused."""
+    """Figs 10/11: latency & energy of each fusion mapping vs unfused.
+
+    All (shape, arch, variant) cells fan out through the search_many
+    sweep driver; each cell is an exhaustive batched search.
+    """
     rows = []
     lat_ratios, en_ratios = [], []
     t0 = time.time()
-    for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud())):
+    grids = ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud()))
+    jobs = [(workload_fn(M, N, K), arch,
+             {"budget": BUDGET, "seed": 1, "variants": [v]})
+            for shapes, arch in grids
+            for (M, N, K) in shapes
+            for v in VARIANTS]
+    results = iter(search_many(jobs))
+    for shapes, arch in grids:
         for i, (M, N, K) in enumerate(shapes):
-            co = workload_fn(M, N, K)
-            res = {}
-            for v in ("unfused", "fused_epilogue", "fused_std", "fused_dist"):
-                r = search(co, arch, budget=BUDGET, seed=1, variants=[v])
-                res[v] = r
+            res = {v: next(results) for v in VARIANTS}
             best_fused = min(("fused_epilogue", "fused_std", "fused_dist"),
                              key=lambda v: res[v].latency)
             lat_r = res["unfused"].latency / res[best_fused].latency
@@ -69,14 +79,24 @@ def fusion_comparison(workload_fn, label: str, paper_claim: float) -> Dict:
 def attention_variants() -> Dict:
     """Fig 12: UA / PFA / FA latency & energy (paper: 1.82x / 1.54x FA)."""
     lat_ratios, en_ratios = [], []
-    for shapes, arch in ((ATTN_EDGE, edge()), (ATTN_CLOUD, cloud())):
+    grids = ((ATTN_EDGE, edge()), (ATTN_CLOUD, cloud()))
+    jobs = []
+    for shapes, arch in grids:
+        for (M, K, N, L) in shapes:
+            jobs += [
+                (attention(M, K, N, L), arch,
+                 {"budget": BUDGET, "seed": 1, "variants": ["ua"]}),
+                (attention(M, K, N, L), arch,
+                 {"budget": BUDGET, "seed": 1, "variants": ["pfa"]}),
+                (flash_attention(M, K, N, L), arch,
+                 {"budget": BUDGET, "seed": 1, "variants": ["fa"]}),
+            ]
+    results = iter(search_many(jobs))
+    for shapes, arch in grids:
         for i, (M, K, N, L) in enumerate(shapes):
-            ua = search(attention(M, K, N, L), arch, budget=BUDGET, seed=1,
-                        variants=["ua"]).best
-            pfa = search(attention(M, K, N, L), arch, budget=BUDGET, seed=1,
-                         variants=["pfa"]).best
-            fa = search(flash_attention(M, K, N, L), arch, budget=BUDGET,
-                        seed=1, variants=["fa"]).best
+            ua = next(results).best
+            pfa = next(results).best
+            fa = next(results).best
             lat_ratios.append(ua.latency / fa.latency)
             en_ratios.append(ua.energy_pj / fa.energy_pj)
             print(f"attn_{arch.name}_A{i+1},{fa.latency*1e6:.2f},"

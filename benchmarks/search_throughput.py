@@ -1,0 +1,163 @@
+"""Map-space evaluation throughput: batched engine vs per-spec tree path.
+
+Measures mappings/sec through
+
+* the **per-spec tree path** (the seed implementation's hot loop):
+  ``build_tree`` -> ``validate_tree`` -> recursive ``CostModel.evaluate``
+  per sampled spec, and
+* the **batched engine** (core/batcheval.py): the same space evaluated
+  topology-by-topology in vectorized structure-of-arrays passes,
+
+on the paper's gemm_softmax and attention spaces, and cross-checks that
+exhaustive search returns latency <= the seed randomized search on every
+(workload, arch) pair of ``paper_tables.py``.
+
+Emits ``BENCH_search.json`` (schema documented in benchmarks/README.md)
+and prints ``name,us_per_call,derived`` CSV rows.  Exits non-zero if the
+speedup floor or the exhaustive<=randomized invariant is violated.
+"""
+from __future__ import annotations
+
+import json
+import random
+import sys
+import time
+from typing import Dict, List
+
+from repro.core import batcheval
+from repro.core.batcheval import enumerate_topologies, evaluate_topology_grid
+from repro.core.hardware import cloud, edge
+from repro.core.ir import evaluate_mapping
+from repro.core.search import candidate_specs, search, _sample
+from repro.core.workload import attention, flash_attention, gemm_softmax
+
+SPEEDUP_FLOOR = 20.0
+TREE_SAMPLE = 300          # specs timed through the per-spec path
+MIN_TREE_SECONDS = 0.25    # keep timing noise down on fast machines
+
+
+def _tree_throughput(co, arch, cands, repeats: int = 3) -> Dict:
+    """mappings/sec of the per-spec build->validate->evaluate path (best
+    of ``repeats`` timed passes)."""
+    best = None
+    for _ in range(repeats):
+        rng = random.Random(0)
+        done = 0
+        t0 = time.perf_counter()
+        while done < TREE_SAMPLE or time.perf_counter() - t0 < MIN_TREE_SECONDS:
+            spec = _sample(rng, cands)
+            try:
+                evaluate_mapping(co, arch, spec)
+            except (ValueError, KeyError):
+                continue
+            done += 1
+        dt = time.perf_counter() - t0
+        if best is None or done / dt > best["mappings_per_sec"]:
+            best = {"mappings": done, "seconds": dt,
+                    "mappings_per_sec": done / dt}
+    return best
+
+
+def _batch_throughput(co, arch, cands, repeats: int = 3) -> Dict:
+    """mappings/sec of the batched engine over the full enumerable space.
+    Cold (caches cleared before each pass) is reported as the best of
+    ``repeats`` passes to damp scheduler noise; a warm (cached) pass is
+    reported separately."""
+    topos = enumerate_topologies(co, cands)
+
+    def one_pass() -> Dict:
+        t0 = time.perf_counter()
+        n = 0
+        best = float("inf")
+        for topo in topos:
+            br = evaluate_topology_grid(co, arch, topo, cands)
+            n += br.size
+            i = br.best_index("latency")
+            if i is not None:
+                best = min(best, float(br.latency[i]))
+        dt = time.perf_counter() - t0
+        return {"mappings": n, "seconds": dt, "mappings_per_sec": n / dt,
+                "best_latency_s": best}
+
+    cold = None
+    for _ in range(repeats):
+        batcheval.cache_clear()
+        p = one_pass()
+        if cold is None or p["seconds"] < cold["seconds"]:
+            cold = p
+    warm = one_pass()
+    return {"cold": cold, "warm": warm, "topologies": len(topos)}
+
+
+def measure_space(name: str, co, arch) -> Dict:
+    cands = candidate_specs(co, arch)
+    tree = _tree_throughput(co, arch, cands)
+    batch = _batch_throughput(co, arch, cands)
+    speedup = batch["cold"]["mappings_per_sec"] / tree["mappings_per_sec"]
+    print(f"search_throughput_{name},"
+          f"{1e6 / batch['cold']['mappings_per_sec']:.2f},"
+          f"tree={tree['mappings_per_sec']:.0f}/s;"
+          f"batch={batch['cold']['mappings_per_sec']:.0f}/s;"
+          f"speedup={speedup:.1f}x;"
+          f"space={batch['cold']['mappings']}specs")
+    return {"workload": name, "arch": arch.name, "tree": tree,
+            "batch": batch, "speedup": speedup}
+
+
+def exhaustive_vs_seed_randomized() -> List[Dict]:
+    """Every (workload, arch) pair of paper_tables.py: exhaustive search
+    must return latency <= the seed's randomized search result."""
+    from benchmarks.paper_tables import (ATTN_CLOUD, ATTN_EDGE, BUDGET,
+                                         GEMMS_CLOUD, GEMMS_EDGE)
+    from repro.core.workload import gemm_layernorm
+
+    rows = []
+    for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud())):
+        for M, N, K in shapes:
+            for fn in (gemm_softmax, gemm_layernorm):
+                rows.append((fn.__name__, fn(M, N, K), arch))
+    for shapes, arch in ((ATTN_EDGE, edge()), (ATTN_CLOUD, cloud())):
+        for M, K, N, L in shapes:
+            rows.append(("attention", attention(M, K, N, L), arch))
+            rows.append(("flash_attention", flash_attention(M, K, N, L), arch))
+
+    out = []
+    for name, co, arch in rows:
+        ex = search(co, arch, mode="exhaustive")
+        rd = search(co, arch, mode="randomized", budget=BUDGET, seed=1)
+        out.append({
+            "workload": name,
+            "dims": dict(co.dim_sizes),
+            "arch": arch.name,
+            "exhaustive_latency_s": ex.latency,
+            "randomized_latency_s": rd.latency,
+            "ok": ex.latency <= rd.latency * (1 + 1e-12),
+        })
+    bad = [r for r in out if not r["ok"]]
+    print(f"exhaustive_vs_randomized,0,pairs={len(out)};regressions={len(bad)}")
+    return out
+
+
+def run_all(out_path: str = "BENCH_search.json") -> Dict:
+    spaces = [
+        measure_space("gemm_softmax", gemm_softmax(512, 1024, 128), edge()),
+        measure_space("attention", attention(1024, 256, 1024, 256), edge()),
+    ]
+    pairs = exhaustive_vs_seed_randomized()
+    result = {
+        "schema": "comet/search_throughput/v1",
+        "speedup_floor": SPEEDUP_FLOOR,
+        "spaces": spaces,
+        "exhaustive_vs_randomized": pairs,
+        "ok": (all(s["speedup"] >= SPEEDUP_FLOOR for s in spaces)
+               and all(p["ok"] for p in pairs)),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"search_throughput_ok,0,{result['ok']};wrote={out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    res = run_all()
+    sys.exit(0 if res["ok"] else 1)

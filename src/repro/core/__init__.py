@@ -1,16 +1,21 @@
 # COMET core — the paper's primary contribution: explicit-collective
 # mapping representation + compound-operation cost model + map-space search.
-from . import collectives, cost, hardware, ir, mapping, search, validate, workload, yamlio
+from . import (batcheval, collectives, cost, hardware, ir, mapping, search,
+               validate, workload, yamlio)
+from .batcheval import (BatchResult, Topology, evaluate_specs_batch,
+                        evaluate_topology_grid)
 from .hardware import Arch, cloud, edge, tpu_v5e
 from .ir import MappingResult, MappingSpec, build_tree, evaluate_mapping
-from .search import SearchResult, search as map_search
+from .search import SearchResult, search as map_search, search_many
 from .workload import (CompoundOp, attention, flash_attention, gemm,
                        gemm_layernorm, gemm_softmax, ssd_chunk)
 
 __all__ = [
     "Arch", "cloud", "edge", "tpu_v5e",
     "MappingResult", "MappingSpec", "build_tree", "evaluate_mapping",
-    "SearchResult", "map_search",
+    "SearchResult", "map_search", "search_many",
+    "BatchResult", "Topology", "evaluate_specs_batch",
+    "evaluate_topology_grid",
     "CompoundOp", "attention", "flash_attention", "gemm",
     "gemm_layernorm", "gemm_softmax", "ssd_chunk",
 ]

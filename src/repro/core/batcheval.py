@@ -1,0 +1,320 @@
+"""Vectorized batch map-space evaluation engine (DFModel-style factoring).
+
+The mapping space of Fig. 1 factors into
+
+* a **topology** — the discrete shape of the mapping tree: fusion variant
+  x schedule x collective granularity x GB loop order.  A compound op has
+  only a handful of topologies, and the tree structure (nodes, labels,
+  tensors, collectives) is fully determined by the topology; and
+* **numeric tiling parameters** — the m/k/n temporal tile counts, which
+  only change Loop factors, tile sizes and collective data volumes.
+
+Exploiting that, one topology's entire numeric grid is evaluated in a
+single structure-of-arrays pass: ``build_tree`` is called once with NumPy
+int arrays for the tiling parameters, and the unchanged Eq. 1-7 formulas
+in :mod:`.cost`, :mod:`.collectives` and :mod:`.validate` broadcast
+through the tree.  Results are bit-identical to the per-spec path (same
+code, same formulas) at a fraction of the per-mapping Python overhead.
+
+Two LRU caches sit on top:
+
+* a **grid cache** keyed on (compound-op signature, arch name, topology,
+  candidate axes) holding whole :class:`BatchResult` arrays, and
+* a **spec cache** keyed on (compound-op signature, arch name, spec)
+  holding lightweight (latency, energy, valid) triples for the randomized
+  fallback path.
+
+Both are shared across searches (see :func:`repro.core.search.search` and
+``search_many``).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import CostModel
+from .hardware import Arch
+from .ir import MappingSpec, build_tree
+from .validate import validity_mask
+from .workload import CompoundOp
+
+__all__ = [
+    "Topology",
+    "BatchResult",
+    "co_signature",
+    "numeric_axes",
+    "enumerate_topologies",
+    "evaluate_specs_batch",
+    "evaluate_topology_grid",
+    "evaluate_cached",
+    "cache_info",
+    "cache_clear",
+]
+
+GEMM_EPILOGUE_COS = ("gemm", "gemm_softmax", "gemm_layernorm")
+ATTENTION_COS = ("attention", "flash_attention")
+
+OBJECTIVES = ("latency", "energy", "edp")
+
+
+@dataclass(frozen=True)
+class Topology:
+    """The discrete (non-numeric) part of a MappingSpec."""
+
+    variant: str
+    schedule: str = "sequential"
+    collective_gran: str = "tile"
+    loop_order_gb: Tuple[str, ...] = ("M", "N")
+
+    def spec(self, m_tiles: int = 1, k_tiles: int = 1,
+             n_tiles: int = 1) -> MappingSpec:
+        return MappingSpec(
+            variant=self.variant, m_tiles=m_tiles, k_tiles=k_tiles,
+            n_tiles=n_tiles, schedule=self.schedule,
+            collective_gran=self.collective_gran,
+            loop_order_gb=self.loop_order_gb)
+
+
+@dataclass
+class BatchResult:
+    """Structure-of-arrays result of one topology's numeric grid."""
+
+    topo: Topology
+    m_tiles: np.ndarray
+    k_tiles: np.ndarray
+    n_tiles: np.ndarray
+    latency: np.ndarray
+    energy_pj: np.ndarray
+    valid: np.ndarray
+
+    @property
+    def size(self) -> int:
+        return int(self.latency.shape[0])
+
+    def scores(self, objective: str = "latency") -> np.ndarray:
+        """Objective value per grid point; +inf where invalid."""
+        if objective == "latency":
+            s = self.latency
+        elif objective == "energy":
+            s = self.energy_pj
+        elif objective == "edp":
+            s = self.latency * self.energy_pj
+        else:
+            raise ValueError(f"unknown objective {objective!r}")
+        return np.where(self.valid, s, np.inf)
+
+    def best_index(self, objective: str = "latency") -> Optional[int]:
+        if self.size == 0 or not bool(self.valid.any()):
+            return None
+        return int(np.argmin(self.scores(objective)))
+
+    def spec_at(self, i: int) -> MappingSpec:
+        return self.topo.spec(int(self.m_tiles[i]), int(self.k_tiles[i]),
+                              int(self.n_tiles[i]))
+
+
+# ------------------------------------------------------------- signatures
+
+
+def co_signature(co: CompoundOp) -> Tuple:
+    """Hashable identity of a compound op for cache keying: name, dims and
+    tensor layouts (ops are derived from the builder, so name+dims+tensors
+    pin the workload)."""
+    return (
+        co.name,
+        tuple(sorted(co.dim_sizes.items())),
+        tuple(sorted((t.name, t.dims, t.dtype_bytes)
+                     for t in co.tensors.values())),
+    )
+
+
+def numeric_axes(co: CompoundOp) -> Tuple[str, ...]:
+    """Which numeric MappingSpec axes actually reach the tree builder for
+    this compound op (the rest are degenerate and pinned to 1)."""
+    if co.name in GEMM_EPILOGUE_COS:
+        return ("m_tiles", "k_tiles")
+    if co.name in ATTENTION_COS:
+        return ("m_tiles", "n_tiles")
+    return ("m_tiles",)
+
+
+def topology_fields(co: CompoundOp) -> Tuple[str, ...]:
+    """Which discrete MappingSpec fields alter the tree for this compound
+    op.  GEMM-epilogue trees ignore the GB loop order; attention trees
+    ignore the collective granularity; the generic builder only branches
+    on fused-vs-unfused."""
+    if co.name in GEMM_EPILOGUE_COS:
+        return ("variant", "schedule", "collective_gran")
+    if co.name in ATTENTION_COS:
+        return ("variant", "schedule", "loop_order_gb")
+    return ("variant",)
+
+
+def enumerate_topologies(co: CompoundOp,
+                         cands: Dict[str, List]) -> List[Topology]:
+    """All distinct topologies for ``co`` given the candidate sets from
+    :func:`repro.core.search.candidate_specs`.  Fields that do not alter
+    the tree are pinned to their first candidate, so the enumeration has
+    no duplicate-cost topologies."""
+    fields = topology_fields(co)
+
+    def opts(name: str) -> List:
+        return cands[name] if name in fields else cands[name][:1]
+
+    out = []
+    for variant in opts("variant"):
+        for schedule in opts("schedule"):
+            for gran in opts("collective_gran"):
+                for lo in opts("loop_order_gb"):
+                    out.append(Topology(variant=variant, schedule=schedule,
+                                        collective_gran=gran,
+                                        loop_order_gb=tuple(lo)))
+    return out
+
+
+# ------------------------------------------------------------- evaluation
+
+
+def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
+                         m_tiles: Sequence[int], k_tiles: Sequence[int],
+                         n_tiles: Sequence[int]) -> BatchResult:
+    """Evaluate parallel arrays of (m, k, n) tile counts for one topology
+    in a single vectorized pass."""
+    m = np.asarray(m_tiles, dtype=np.int64)
+    k = np.asarray(k_tiles, dtype=np.int64)
+    n = np.asarray(n_tiles, dtype=np.int64)
+    m, k, n = np.broadcast_arrays(m, k, n)
+    shape = m.shape
+    spec = MappingSpec(
+        variant=topo.variant, m_tiles=m, k_tiles=k, n_tiles=n,
+        schedule=topo.schedule, collective_gran=topo.collective_gran,
+        loop_order_gb=topo.loop_order_gb)
+    try:
+        root, tiling = build_tree(co, arch, spec)
+    except (ValueError, KeyError):
+        # Whole topology rejected (e.g. unknown variant for this builder):
+        # mirror the scalar path, which skips these specs.
+        zeros = np.zeros(shape)
+        return BatchResult(topo, m, k, n, zeros, zeros,
+                           np.zeros(shape, dtype=bool))
+    valid = np.broadcast_to(
+        validity_mask(root, arch, tiling, co.tensors), shape).copy()
+    cost = CostModel(arch, tiling, co.tensors,
+                     track_breakdown=False).evaluate(root)
+    latency = np.ascontiguousarray(
+        np.broadcast_to(np.asarray(cost.latency, dtype=np.float64), shape))
+    energy = np.ascontiguousarray(
+        np.broadcast_to(np.asarray(cost.energy_pj, dtype=np.float64), shape))
+    return BatchResult(topo, m, k, n, latency, energy, valid)
+
+
+def _grid_arrays(co: CompoundOp, cands: Dict[str, List]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    axes = numeric_axes(co)
+    per_axis = [np.asarray(cands[ax], dtype=np.int64) if ax in axes
+                else np.asarray([1], dtype=np.int64)
+                for ax in ("m_tiles", "k_tiles", "n_tiles")]
+    mg = np.meshgrid(*per_axis, indexing="ij")
+    return tuple(g.reshape(-1) for g in mg)
+
+
+def grid_size(co: CompoundOp, cands: Dict[str, List]) -> int:
+    """Number of grid points per topology for this compound op."""
+    n = 1
+    for ax in numeric_axes(co):
+        n *= len(cands[ax])
+    return n
+
+
+# ------------------------------------------------------------------ caches
+
+
+class _LRU:
+    """Tiny thread-safe LRU (search_many fans searches out over threads
+    that share these caches)."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self.data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.Lock()
+
+    def get(self, key):
+        with self._lock:
+            if key in self.data:
+                self.data.move_to_end(key)
+                self.hits += 1
+                return self.data[key]
+            self.misses += 1
+            return None
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self.data[key] = value
+            self.data.move_to_end(key)
+            while len(self.data) > self.maxsize:
+                self.data.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self.data.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+_GRID_CACHE = _LRU(maxsize=1024)
+_SPEC_CACHE = _LRU(maxsize=65536)
+
+
+def cache_info() -> Dict[str, Dict[str, int]]:
+    return {
+        "grid": {"hits": _GRID_CACHE.hits, "misses": _GRID_CACHE.misses,
+                 "size": len(_GRID_CACHE.data)},
+        "spec": {"hits": _SPEC_CACHE.hits, "misses": _SPEC_CACHE.misses,
+                 "size": len(_SPEC_CACHE.data)},
+    }
+
+
+def cache_clear() -> None:
+    _GRID_CACHE.clear()
+    _SPEC_CACHE.clear()
+
+
+def evaluate_topology_grid(co: CompoundOp, arch: Arch, topo: Topology,
+                           cands: Dict[str, List]) -> BatchResult:
+    """Whole-grid evaluation of one topology, LRU-cached on the compound
+    op signature, arch name, topology and candidate axes."""
+    key = (co_signature(co), arch.name, topo,
+           tuple(cands["m_tiles"]), tuple(cands["k_tiles"]),
+           tuple(cands["n_tiles"]))
+    hit = _GRID_CACHE.get(key)
+    if hit is not None:
+        return hit
+    m, k, n = _grid_arrays(co, cands)
+    br = evaluate_specs_batch(co, arch, topo, m, k, n)
+    _GRID_CACHE.put(key, br)
+    return br
+
+
+def evaluate_cached(co: CompoundOp, arch: Arch, spec: MappingSpec
+                    ) -> Optional[Tuple[float, float, bool]]:
+    """Lightweight cached per-spec evaluation: (latency, energy_pj, valid),
+    or None when the spec is rejected outright (the scalar path raises).
+    Shared by the randomized search fallback across searches."""
+    key = (co_signature(co), arch.name, spec)
+    hit = _SPEC_CACHE.get(key)
+    if hit is not None:
+        return hit if hit != () else None
+    from .ir import evaluate_mapping
+    try:
+        r = evaluate_mapping(co, arch, spec)
+        val = (r.latency, r.energy_pj, r.valid)
+    except (ValueError, KeyError):
+        val = ()
+    _SPEC_CACHE.put(key, val)
+    return val if val != () else None

@@ -26,7 +26,10 @@ import math
 from dataclasses import dataclass
 from typing import Tuple
 
+import numpy as np
+
 from .hardware import NoCParams
+from .numerics import is_array
 
 __all__ = [
     "CollectiveCost",
@@ -83,7 +86,12 @@ def collective_cost(
     transfers (paired exchange schedule).
     """
     P = int(participants)
-    if P <= 1 or data_volume <= 0:
+    if P <= 1:
+        return CollectiveCost(0.0, 0, 0)
+    if is_array(data_volume):
+        if np.all(data_volume <= 0):
+            return CollectiveCost(0.0, 0, 0)
+    elif data_volume <= 0:
         return CollectiveCost(0.0, 0, 0)
     if col_type not in COLLECTIVE_TYPES:
         raise ValueError(f"unknown collective type {col_type!r}")
@@ -121,6 +129,11 @@ def collective_cost(
     else:  # pragma: no cover
         raise AssertionError(col_type)
 
+    if is_array(vol):
+        # Batched path: grid points with dv <= 0 move nothing (the scalar
+        # path short-circuits those to a zero CollectiveCost above).
+        vol = np.where(np.asarray(data_volume) > 0, vol, 0.0)
+        return CollectiveCost(vol, int(hops), steps)
     return CollectiveCost(float(vol), int(hops), steps)
 
 
@@ -139,6 +152,10 @@ def _mesh_avg_distance(noc: NoCParams) -> float:
 
 def noc_latency(cost: CollectiveCost, noc: NoCParams) -> float:
     """Eq. 3: NoCLat = t_router * hops + t_enq * DV / W  (seconds)."""
+    if is_array(cost.volume_bytes):
+        lat = (noc.t_router * cost.hops
+               + noc.t_enq * (cost.volume_bytes / noc.channel_width))
+        return np.where(cost.volume_bytes > 0, lat, 0.0)
     if cost.volume_bytes <= 0:
         return 0.0
     return noc.t_router * cost.hops + noc.t_enq * (cost.volume_bytes / noc.channel_width)

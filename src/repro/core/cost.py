@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Tuple
 from .collectives import collective_cost, noc_latency
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
+from .numerics import ceil_div, reduce_max, vmax
 from .workload import TensorSpec
 
 __all__ = ["NodeCost", "CostModel", "systolic_gemm_cycles"]
@@ -60,8 +61,9 @@ class NodeCost:
     energy_breakdown: Dict[str, float] = field(default_factory=lambda: _zeros(ENERGY_KEYS))
 
     def add_energy(self, key: str, pj: float) -> None:
-        self.energy_breakdown[key] += pj
-        self.energy_pj += pj
+        if self.energy_breakdown:
+            self.energy_breakdown[key] += pj
+        self.energy_pj = self.energy_pj + pj
 
     def scaled(self, lat_scale: float, energy_scale: float) -> "NodeCost":
         out = NodeCost(
@@ -75,11 +77,12 @@ class NodeCost:
         return out
 
     def accumulate(self, other: "NodeCost") -> None:
-        for k, v in other.lat_breakdown.items():
-            self.lat_breakdown[k] += v
-        for k, v in other.energy_breakdown.items():
-            self.energy_breakdown[k] += v
-        self.energy_pj += other.energy_pj
+        if self.lat_breakdown:
+            for k, v in other.lat_breakdown.items():
+                self.lat_breakdown[k] += v
+            for k, v in other.energy_breakdown.items():
+                self.energy_breakdown[k] += v
+        self.energy_pj = self.energy_pj + other.energy_pj
 
 
 def _energy_key(level_name: str) -> str:
@@ -99,23 +102,35 @@ def systolic_gemm_cycles(m: int, n: int, k: int, rows: int, cols: int,
     on ``num_arrays`` arrays of ``rows x cols`` PEs: the weight matrix folds
     into ceil(k/rows)*ceil(n/cols) array loads; each fold streams m rows:
     cycles = rows (fill) + m + cols - 1 (drain)."""
-    folds = math.ceil(k / rows) * math.ceil(n / cols)
+    folds = ceil_div(k, rows) * ceil_div(n, cols)
     per_fold = rows + m + cols - 1
-    return math.ceil(folds / num_arrays) * per_fold
+    return ceil_div(folds, num_arrays) * per_fold
 
 
 class CostModel:
-    """Evaluates a mapping tree bottom-up (§IV-B)."""
+    """Evaluates a mapping tree bottom-up (§IV-B).
+
+    ``track_breakdown=False`` skips the per-key latency/energy breakdown
+    dicts (total latency / energy / mem_lat are unaffected) — used by the
+    batched engine where only the totals feed the argmin.
+    """
 
     def __init__(self, arch: Arch, tiling: Tiling,
-                 tensors: Dict[str, TensorSpec]):
+                 tensors: Dict[str, TensorSpec], *,
+                 track_breakdown: bool = True):
         self.arch = arch
         self.tiling = tiling
         self.tensors = tensors
+        self.track_breakdown = track_breakdown
+
+    def _cost(self) -> NodeCost:
+        if self.track_breakdown:
+            return NodeCost()
+        return NodeCost(lat_breakdown={}, energy_breakdown={})
 
     # ------------------------------------------------------------- leaves
     def compute_cost(self, node: ComputeNode) -> NodeCost:
-        c = NodeCost()
+        c = self._cost()
         if node.unit == "gemm":
             u = self.arch.gemm_unit
             red = node.op.reduce_dims
@@ -126,19 +141,21 @@ class CostModel:
             cyc = systolic_gemm_cycles(m, n, k, u.array_rows, u.array_cols,
                                        u.num_arrays)
             c.latency = cyc / u.freq_hz
-            c.lat_breakdown["gemm"] = c.latency
+            if self.track_breakdown:
+                c.lat_breakdown["gemm"] = c.latency
             c.add_energy("gemm", m * n * k * u.mac_energy_pj)
         else:
             s = self.arch.simd_unit
             ops = node.points * node.op.flops_per_point
             c.latency = ops / s.peak_ops_per_sec
-            c.lat_breakdown["simd"] = c.latency
+            if self.track_breakdown:
+                c.lat_breakdown["simd"] = c.latency
             c.add_energy("simd", ops * s.op_energy_pj)
         return c
 
     # -------------------------------------------------------- collectives
     def collective_cost_node(self, node: CollectiveNode) -> NodeCost:
-        c = NodeCost()
+        c = self._cost()
         noc = (self.arch.cluster_noc if node.noc_level == "GB"
                else self.arch.core_noc)
         cc = collective_cost(node.col_type, node.data_volume_bytes,
@@ -147,7 +164,8 @@ class CostModel:
         lat_once = mem_lat + noc_latency(cc, noc)                # Eq. 4
         c.latency = lat_once * node.count
         c.mem_lat = mem_lat * node.count
-        c.lat_breakdown["collective"] = c.latency
+        if self.track_breakdown:
+            c.lat_breakdown["collective"] = c.latency
         c.add_energy("noc", cc.volume_bytes * cc.hops
                      * noc.hop_energy_pj_per_byte * node.count)
         if node.src:
@@ -164,7 +182,7 @@ class CostModel:
         n_iter = node.iterations
         fanout = node.spatial_fanout
 
-        c = NodeCost()
+        c = self._cost()
         # Children execute exec_fraction * n_iter times, in every instance.
         for cc, fr in zip(child_costs, fracs):
             c.accumulate(cc.scaled(lat_scale=n_iter * fr,
@@ -177,12 +195,13 @@ class CostModel:
         elif node.schedule == "sequential" or len(child_costs) == 1:
             mw = sum(cc.latency * fr for cc, fr in zip(child_costs, fracs))
         else:
-            mx = max(cc.latency * fr for cc, fr in zip(child_costs, fracs))
+            mx = reduce_max(cc.latency * fr for cc, fr in zip(child_costs, fracs))
             conflict = (sum(cc.mem_lat * fr for cc, fr in zip(child_costs, fracs))
                         - mx)                                       # Eq. 7
-            stall = max(0.0, conflict)                              # Eq. 6
+            stall = vmax(0.0, conflict)                             # Eq. 6
             mw = mx + stall
-            c.lat_breakdown["os"] += stall * n_iter
+            if self.track_breakdown:
+                c.lat_breakdown["os"] += stall * n_iter
 
         # ---- boundary traffic parent(level) -> level (Eq. 1)
         parent_level = self.arch.parent_of(node.level)
@@ -216,7 +235,7 @@ class CostModel:
                 pb, cb = _traffic(t)
                 total_in += pb
                 write_child += cb
-                fill_b += pb / max(1, node.tensor_fetches(
+                fill_b += pb / vmax(1, node.tensor_fetches(
                     self.tensors[t].dims, node.tensor_nests.get(t)))
             for t in node.output_tensors:
                 if t in node.bypass_tensors:
@@ -224,7 +243,7 @@ class CostModel:
                 pb, cb = _traffic(t)
                 total_out += pb
                 read_child += cb
-                drain_b += pb / max(1, node.tensor_fetches(
+                drain_b += pb / vmax(1, node.tensor_fetches(
                     self.tensors[t].dims, node.tensor_nests.get(t)))
 
             mem_time = (total_in + total_out) / eff_bw
@@ -239,11 +258,12 @@ class CostModel:
 
         # Eq. 2
         window_total = n_iter * mw
-        os_stall = max(0.0, mem_time - window_total)
+        os_stall = vmax(0.0, mem_time - window_total)
         c.latency = window_total + cs + os_stall
         c.mem_lat = mem_time
-        c.lat_breakdown["cs"] += cs
-        c.lat_breakdown["os"] += os_stall
+        if self.track_breakdown:
+            c.lat_breakdown["cs"] += cs
+            c.lat_breakdown["os"] += os_stall
         return c
 
     # ------------------------------------------------------------ dispatch

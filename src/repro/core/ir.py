@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Tuple
 from .cost import CostModel, NodeCost
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Loop, Node, TileNode, Tiling
+from .numerics import ceil_div, vmax, vmin
 from .validate import validate_tree
 from .workload import CompoundOp, Operation, TensorSpec
 
@@ -74,12 +75,12 @@ class MappingResult:
 
 
 def _ceil_div(a: int, b: int) -> int:
-    return max(1, math.ceil(a / b))
+    return vmax(1, ceil_div(a, b))
 
 
 def _clamped_spatial(size: int, want: int) -> int:
     """Spatial fanout cannot exceed the dimension size."""
-    return max(1, min(want, size))
+    return vmax(1, vmin(want, size))
 
 
 def _leaf_shape(tiling: Tiling, dims: Tuple[str, ...]) -> Dict[str, int]:
@@ -110,8 +111,8 @@ def _build_gemm_epilogue(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple
     M, N, K = (co.dim_sizes[d] for d in ("M", "N", "K"))
     n_cl = _clamped_spatial(N, arch.num_clusters)
     n_co = _clamped_spatial(_ceil_div(N, n_cl), arch.cores_per_cluster)
-    m_tiles = min(spec.m_tiles, M)
-    k_tiles = min(spec.k_tiles, K)
+    m_tiles = vmin(spec.m_tiles, M)
+    k_tiles = vmin(spec.k_tiles, K)
 
     tiling = Tiling(
         co.dim_sizes,
@@ -310,8 +311,8 @@ def _build_attention(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[Til
                                 _clamped_spatial(_ceil_div(N, arch.num_clusters),
                                                  arch.cores_per_cluster), "N")
 
-    m_tiles = min(spec.m_tiles, M)
-    n_tiles = min(spec.n_tiles, max(1, N // (sp_gb * sp_ob if sp_dim == "N" else 1)))
+    m_tiles = vmin(spec.m_tiles, M)
+    n_tiles = vmin(spec.n_tiles, max(1, N // (sp_gb * sp_ob if sp_dim == "N" else 1)))
     # KV streaming (the N temporal loop) lives at the GB node: blocks of
     # K^T/V are staged DRAM->GB per iteration (FLAT/FlashAttention style).
     gb_loops = ([Loop("M", m_tiles), Loop("N", n_tiles)]
@@ -444,7 +445,7 @@ def _build_generic(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[TileN
     part_dim = max(cnt, key=lambda d: (cnt[d], dims[d]))
     p_cl = _clamped_spatial(dims[part_dim], arch.num_clusters)
     p_co = _clamped_spatial(_ceil_div(dims[part_dim], p_cl), arch.cores_per_cluster)
-    m_tiles = min(spec.m_tiles, max(1, dims[part_dim] // (p_cl * p_co)) or 1)
+    m_tiles = vmin(spec.m_tiles, max(1, dims[part_dim] // (p_cl * p_co)) or 1)
     tiling = Tiling(dims,
                     temporal={"GB": {part_dim: m_tiles}},
                     spatial={"GB": {part_dim: p_cl}, "OB": {part_dim: p_co}})
@@ -474,7 +475,7 @@ def _build_generic(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[TileN
             children.append(CollectiveNode(
                 col_type="AllReduce", tensor=op.output, reduce_op="add",
                 src=("GB",), dest=("GB",), participants=p_cl,
-                data_volume_bytes=out_b / max(1, m_tiles), count=1,
+                data_volume_bytes=out_b / vmax(1, m_tiles), count=1,
                 noc_level="GB", label=f"CO_{op.name}"))
     if fused:
         # single fused GB region: merge into one GB node sequence

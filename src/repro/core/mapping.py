@@ -22,6 +22,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
+from .numerics import ceil_div, is_array, vmax
 from .workload import CompoundOp, Operation, TensorSpec
 
 __all__ = [
@@ -49,7 +52,9 @@ class Loop:
     spatial: bool = False
 
     def __post_init__(self) -> None:
-        if self.factor < 1:
+        # Batched evaluation passes an array of factors; bounds are then
+        # enforced by the grid construction, not per-Loop.
+        if not is_array(self.factor) and self.factor < 1:
             raise ValueError(f"loop factor must be >=1, got {self.factor}")
 
 
@@ -68,51 +73,84 @@ class Tiling:
         self.dim_sizes = dict(dim_sizes)
         self.temporal = {lvl: dict(temporal.get(lvl, {})) for lvl in LEVEL_ORDER}
         self.spatial = {lvl: dict(spatial.get(lvl, {})) for lvl in LEVEL_ORDER}
+        # Factors are fixed after construction, so tile queries are
+        # memoized — one tree evaluation asks for the same (dim, level)
+        # tiles many times (and, on the batched path, each query is an
+        # array op worth amortizing).
+        self._memo: Dict[Tuple, object] = {}
 
     # ------------------------------------------------------------------
     def factors_of(self, dim: str) -> int:
-        p = 1
-        for lvl in LEVEL_ORDER:
-            p *= self.temporal[lvl].get(dim, 1)
-            p *= self.spatial[lvl].get(dim, 1)
-        return p
+        key = ("f", dim)
+        out = self._memo.get(key)
+        if out is None:
+            p = 1
+            for lvl in LEVEL_ORDER:
+                p *= self.temporal[lvl].get(dim, 1)
+                p *= self.spatial[lvl].get(dim, 1)
+            out = self._memo[key] = p
+        return out
 
     def leaf_tile(self, dim: str) -> int:
-        return max(1, math.ceil(self.dim_sizes[dim] / self.factors_of(dim)))
+        return vmax(1, ceil_div(self.dim_sizes[dim], self.factors_of(dim)))
 
     def tile_at(self, dim: str, level: str) -> int:
         """Tile size of ``dim`` *resident at* ``level`` (i.e. after applying
         all factors at levels strictly above ``level``)."""
-        p = 1
-        for lvl in LEVEL_ORDER:
-            if lvl == level:
-                break
-            p *= self.temporal[lvl].get(dim, 1)
-            p *= self.spatial[lvl].get(dim, 1)
-        return max(1, math.ceil(self.dim_sizes[dim] / p))
+        key = ("at", dim, level)
+        out = self._memo.get(key)
+        if out is None:
+            p = 1
+            for lvl in LEVEL_ORDER:
+                if lvl == level:
+                    break
+                p *= self.temporal[lvl].get(dim, 1)
+                p *= self.spatial[lvl].get(dim, 1)
+            out = self._memo[key] = vmax(1, ceil_div(self.dim_sizes[dim], p))
+        return out
 
     def tile_below(self, dim: str, level: str) -> int:
         """Tile size of ``dim`` handed to the *children* of ``level`` (after
         this level's temporal+spatial factors as well)."""
-        p = 1
-        for lvl in LEVEL_ORDER:
-            p *= self.temporal[lvl].get(dim, 1)
-            p *= self.spatial[lvl].get(dim, 1)
-            if lvl == level:
-                break
-        return max(1, math.ceil(self.dim_sizes[dim] / p))
+        key = ("below", dim, level)
+        out = self._memo.get(key)
+        if out is None:
+            p = 1
+            for lvl in LEVEL_ORDER:
+                p *= self.temporal[lvl].get(dim, 1)
+                p *= self.spatial[lvl].get(dim, 1)
+                if lvl == level:
+                    break
+            out = self._memo[key] = vmax(1, ceil_div(self.dim_sizes[dim], p))
+        return out
 
     def tensor_tile_bytes(self, t: TensorSpec, level: str, *, below: bool) -> int:
-        n = t.dtype_bytes
-        for d in t.dims:
-            n *= self.tile_below(d, level) if below else self.tile_at(d, level)
-        return n
+        key = ("tb", t.name, t.dims, t.dtype_bytes, level, below)
+        out = self._memo.get(key)
+        if out is None:
+            n = t.dtype_bytes
+            for d in t.dims:
+                n *= self.tile_below(d, level) if below else self.tile_at(d, level)
+            out = self._memo[key] = n
+        return out
 
     def validate(self) -> None:
         for d, size in self.dim_sizes.items():
-            if self.factors_of(d) > size:
+            f = self.factors_of(d)
+            if is_array(f):
+                raise TypeError("use overfactor_mask() for batched tilings")
+            if f > size:
                 raise ValueError(
-                    f"dim {d}: product of factors {self.factors_of(d)} exceeds size {size}")
+                    f"dim {d}: product of factors {f} exceeds size {size}")
+
+    def overfactor_mask(self):
+        """Batched analogue of :meth:`validate`: elementwise True where the
+        per-dimension factor products are within the dimension sizes (i.e.
+        where the scalar path would *not* raise)."""
+        ok = True
+        for d, size in self.dim_sizes.items():
+            ok = np.logical_and(ok, self.factors_of(d) <= size)
+        return ok
 
 
 # ------------------------------------------------------------------- nodes

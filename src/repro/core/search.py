@@ -1,23 +1,42 @@
 """Map-space search (COMET §V-A).
 
-Iterative randomized search over the 4-D design space of Fig. 1 —
-tiling factors × loop order/spatial unrolling × collective strategy ×
-scheduling — with constraint pruning (memory-fit validation) and a small
-mutation-based hill-climb.  The paper uses up to 10,000 iterations; so do
-we (``budget``).  Deterministic under ``seed``.
+The 4-D design space of Fig. 1 — tiling factors x loop order/spatial
+unrolling x collective strategy x scheduling — factors into a handful of
+discrete *topologies* and a numeric tiling grid per topology (see
+:mod:`.batcheval`).  For the paper's compound ops the whole enumerable
+space is a few thousand points, so ``search()`` is **exhaustive by
+default**: every topology's grid is evaluated in one vectorized pass and
+the global optimum is returned.  When the grid exceeds
+``exhaustive_limit`` (custom candidate sets, huge dims) it falls back to
+the paper's randomized + hill-climb sampling (budget up to 10,000
+iterations, deterministic under ``seed``), now served through a shared
+LRU evaluation cache.
+
+``search_many()`` fans independent (workload, arch, kwargs) search cells
+out over a ``concurrent.futures`` pool — the sweep driver used by the
+benchmark harnesses.
 """
 from __future__ import annotations
 
 import math
+import os
 import random
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from .batcheval import (enumerate_topologies, evaluate_cached,
+                        evaluate_topology_grid, grid_size)
 from .hardware import Arch
 from .ir import MappingResult, MappingSpec, evaluate_mapping
 from .workload import CompoundOp
 
-__all__ = ["SearchResult", "search", "candidate_specs", "pow2_tilings"]
+__all__ = ["SearchResult", "search", "search_many", "parallel_map",
+           "candidate_specs", "pow2_tilings", "EXHAUSTIVE_LIMIT"]
+
+# Exhaustive enumeration cap: above this many grid points per search the
+# randomized fallback kicks in.  The paper-space grids are ~1e3 points.
+EXHAUSTIVE_LIMIT = 65536
 
 
 @dataclass
@@ -26,6 +45,7 @@ class SearchResult:
     evaluated: int
     valid: int
     history: List[Tuple[int, float]] = field(default_factory=list)  # (iter, best latency)
+    mode: str = "randomized"    # 'exhaustive' | 'randomized'
 
     @property
     def latency(self) -> float:
@@ -92,29 +112,85 @@ def _mutate(rng: random.Random, spec: MappingSpec, cands: Dict[str, List]) -> Ma
     return replace(spec, **{fieldname: rng.choice(cands[fieldname])})
 
 
+def _score_of(latency: float, energy_pj: float, valid: bool,
+              objective: str) -> float:
+    if not valid:
+        return math.inf
+    if objective == "latency":
+        return latency
+    if objective == "energy":
+        return energy_pj
+    return latency * energy_pj
+
+
+# ------------------------------------------------------------------ search
+
+
 def search(co: CompoundOp, arch: Arch, *,
            budget: int = 2000,
            seed: int = 0,
            objective: str = "latency",
            variants: Optional[Sequence[str]] = None,
            allow_stats_gran: bool = False,
-           hillclimb_frac: float = 0.5) -> SearchResult:
-    """Randomized search + hill-climb.  ``objective`` is 'latency',
-    'energy' or 'edp' (energy-delay product)."""
-    rng = random.Random(seed)
+           hillclimb_frac: float = 0.5,
+           mode: str = "auto",
+           exhaustive_limit: int = EXHAUSTIVE_LIMIT) -> SearchResult:
+    """Map-space search.  ``objective`` is 'latency', 'energy' or 'edp'
+    (energy-delay product).
+
+    ``mode``: 'exhaustive' evaluates the whole enumerable space through
+    the batched engine; 'randomized' is the paper's sampling + hill-climb;
+    'auto' (default) picks exhaustive whenever the space fits within
+    ``exhaustive_limit`` points — which is both faster and provably
+    no-worse than any sampled subset of the same space.
+    """
     cands = candidate_specs(co, arch, variants=variants,
                             allow_stats_gran=allow_stats_gran)
+    if mode == "auto":
+        topos = enumerate_topologies(co, cands)
+        total = len(topos) * grid_size(co, cands)
+        mode = "exhaustive" if total <= exhaustive_limit else "randomized"
+    if mode == "exhaustive":
+        return _search_exhaustive(co, arch, cands, objective)
+    if mode == "randomized":
+        return _search_randomized(co, arch, cands, budget=budget, seed=seed,
+                                  objective=objective,
+                                  hillclimb_frac=hillclimb_frac)
+    raise ValueError(f"unknown search mode {mode!r}")
 
-    def score(r: MappingResult) -> float:
-        if not r.valid:
-            return math.inf
-        if objective == "latency":
-            return r.latency
-        if objective == "energy":
-            return r.energy_pj
-        return r.latency * r.energy_pj
 
-    best: Optional[MappingResult] = None
+def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
+                       objective: str) -> SearchResult:
+    best_spec: Optional[MappingSpec] = None
+    best_score = math.inf
+    best_latency = math.inf
+    evaluated = valid = 0
+    history: List[Tuple[int, float]] = []
+    for topo in enumerate_topologies(co, cands):
+        br = evaluate_topology_grid(co, arch, topo, cands)
+        evaluated += br.size
+        valid += int(br.valid.sum())
+        i = br.best_index(objective)
+        if i is None:
+            continue
+        s = float(br.scores(objective)[i])
+        if s < best_score:
+            best_score = s
+            best_spec = br.spec_at(i)
+            best_latency = float(br.latency[i])
+            history.append((evaluated, best_latency))
+    if best_spec is None:
+        raise RuntimeError(f"no valid mapping found for {co.name} on {arch.name}")
+    best = evaluate_mapping(co, arch, best_spec)
+    return SearchResult(best=best, evaluated=evaluated, valid=valid,
+                        history=history, mode="exhaustive")
+
+
+def _search_randomized(co: CompoundOp, arch: Arch, cands: Dict[str, List], *,
+                       budget: int, seed: int, objective: str,
+                       hillclimb_frac: float) -> SearchResult:
+    rng = random.Random(seed)
+    best_spec: Optional[MappingSpec] = None
     best_score = math.inf
     evaluated = valid = 0
     history: List[Tuple[int, float]] = []
@@ -122,28 +198,89 @@ def search(co: CompoundOp, arch: Arch, *,
 
     explore = max(1, int(budget * (1.0 - hillclimb_frac)))
     for i in range(budget):
-        if best is None or i < explore:
+        if best_spec is None or i < explore:
             spec = _sample(rng, cands)
         else:
-            spec = _mutate(rng, best.spec, cands)
-        key = (spec.variant, spec.m_tiles, spec.k_tiles, spec.n_tiles,
-               spec.schedule, spec.collective_gran, spec.loop_order_gb)
-        if key in seen:
+            spec = _mutate(rng, best_spec, cands)
+        if spec in seen:
             continue
-        seen.add(key)
-        try:
-            r = evaluate_mapping(co, arch, spec)
-        except (ValueError, KeyError):
+        seen.add(spec)
+        r = evaluate_cached(co, arch, spec)
+        if r is None:
             continue
+        latency, energy_pj, is_valid = r
         evaluated += 1
-        if r.valid:
+        if is_valid:
             valid += 1
-        s = score(r)
+        s = _score_of(latency, energy_pj, is_valid, objective)
         if s < best_score:
-            best, best_score = r, s
-            history.append((i, r.latency))
+            best_spec, best_score = spec, s
+            history.append((i, latency))
 
-    if best is None:
+    if best_spec is None:
         raise RuntimeError(f"no valid mapping found for {co.name} on {arch.name}")
+    best = evaluate_mapping(co, arch, best_spec)
     return SearchResult(best=best, evaluated=evaluated, valid=valid,
-                        history=history)
+                        history=history, mode="randomized")
+
+
+# ------------------------------------------------------------ sweep driver
+
+
+def _norm_job(job) -> Tuple[CompoundOp, Arch, Dict]:
+    if isinstance(job, dict):
+        kw = dict(job)
+        return kw.pop("co"), kw.pop("arch"), kw
+    if len(job) == 2:
+        co, arch = job
+        return co, arch, {}
+    co, arch, kw = job
+    return co, arch, dict(kw)
+
+
+def _run_search_job(job) -> SearchResult:
+    co, arch, kw = _norm_job(job)
+    return search(co, arch, **kw)
+
+
+def parallel_map(fn: Callable, items: Sequence, *,
+                 max_workers: Optional[int] = None,
+                 executor: str = "auto") -> List:
+    """Order-preserving parallel map over independent work items.
+
+    ``executor``: 'thread' (default under 'auto' — shares the in-process
+    evaluation caches and NumPy releases the GIL in the hot loops),
+    'process' (bypasses the GIL; items/results must pickle), or 'serial'.
+    Falls back to serial execution when a pool cannot be created (e.g.
+    sandboxed environments without working multiprocessing primitives).
+    """
+    items = list(items)
+    if executor == "serial" or len(items) <= 1:
+        return [fn(it) for it in items]
+    pool_cls = ProcessPoolExecutor if executor == "process" else ThreadPoolExecutor
+    try:
+        pool = pool_cls(max_workers=max_workers)
+    except (OSError, PermissionError, ImportError):
+        # Pool creation failed (e.g. sandbox without multiprocessing
+        # primitives) — errors raised by fn itself still propagate below.
+        return [fn(it) for it in items]
+    with pool:
+        if executor == "process":
+            # Amortize per-item pickling for short tasks.
+            chunk = max(1, len(items) // (32 * (max_workers or os.cpu_count() or 4)))
+            return list(pool.map(fn, items, chunksize=chunk))
+        return list(pool.map(fn, items))
+
+
+def search_many(jobs: Sequence, *,
+                max_workers: Optional[int] = None,
+                executor: str = "auto") -> List[SearchResult]:
+    """Parallel sweep driver: run many independent searches concurrently.
+
+    Each job is ``(co, arch)``, ``(co, arch, kwargs)`` or a dict with
+    ``co``/``arch`` keys plus search kwargs.  Results come back in job
+    order.  Used by ``benchmarks/paper_tables.py`` and friends to fan out
+    (workload, arch, variant) cells.
+    """
+    return parallel_map(_run_search_job, jobs, max_workers=max_workers,
+                        executor=executor)

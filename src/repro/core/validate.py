@@ -9,11 +9,14 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+import numpy as np
+
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
 from .workload import TensorSpec
 
-__all__ = ["validate_tree", "ValidationError", "residency_report"]
+__all__ = ["validate_tree", "validity_mask", "ValidationError",
+           "residency_report"]
 
 
 class ValidationError(Exception):
@@ -42,11 +45,12 @@ def residency_report(node: Node, arch: Arch, tiling: Tiling,
             return
         staged = _staged_tensors(n)
         dbl = 2.0 if arch.level(n.level).double_buffered else 1.0
-        resident = n.extra_resident_bytes
+        resident = n.extra_resident_bytes * 1.0
         for t in staged:
             if t in n.bypass_tensors:
                 continue
-            resident += tiling.tensor_tile_bytes(tensors[t], n.level, below=True) * dbl
+            resident = resident + tiling.tensor_tile_bytes(
+                tensors[t], n.level, below=True) * dbl
         if n.level == "OB":
             # split: inputs -> IB+WB, outputs -> OB
             cap = (arch.ib.size_bytes + arch.wb.size_bytes + arch.ob.size_bytes)
@@ -73,3 +77,19 @@ def validate_tree(node: Node, arch: Arch, tiling: Tiling,
                     f"{label}: {resident/1024:.1f} KiB > capacity {cap/1024:.1f} KiB")
             return False
     return True
+
+
+def validity_mask(node: Node, arch: Arch, tiling: Tiling,
+                  tensors: Dict[str, TensorSpec]) -> np.ndarray:
+    """Batched analogue of :func:`validate_tree` for array-valued tilings:
+    elementwise True where the tiling is not over-factored AND every
+    TileNode's staged tensors fit its level capacity (exactly the grid
+    points for which the per-spec path would return True rather than
+    raising or returning False)."""
+    ok = np.asarray(tiling.overfactor_mask())
+    for level, _label, resident, cap in residency_report(node, arch, tiling,
+                                                         tensors):
+        if level == "DRAM":
+            continue  # DRAM holds full tensors by construction
+        ok = np.logical_and(ok, resident <= cap)
+    return ok

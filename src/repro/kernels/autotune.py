@@ -1,13 +1,20 @@
 """COMET-driven Pallas block-size selection (DESIGN.md §2, kernel-level use).
 
-This is the paper's mapping-space exploration applied to TPU tiles: for each
-kernel we build the corresponding compound-op workload, instantiate the
-TPU-v5e hardware model, and evaluate candidate tile shapes with the COMET
-cost model (memory-fit validation + Eq. 1–7 latency).  Results are cached
-per shape.  All functions degrade to safe hardware-aligned defaults if the
-search finds nothing valid.
+This is the paper's mapping-space exploration applied to TPU tiles: for
+each kernel we build the corresponding compound-op workload, instantiate a
+single-core TPU-v5e hardware model, and rank candidate tile shapes with
+the **shared batched evaluation engine** (core/batcheval.py) — the same
+memory-fit validation + Eq. 1–7 latency model the map-space search uses,
+so Pallas block selection and the analytical model cannot drift apart.
+Candidate blocks map onto MappingSpec tile counts (block -> ceil(dim /
+block) temporal tiles) and the whole candidate set is evaluated in one
+vectorized pass.
 
-VMEM budget accounting mirrors the kernels' actual scratch/BlockSpec usage.
+VMEM working-set constraints mirror the kernels' actual scratch/BlockSpec
+usage (those are layout facts about the kernels, not a cost model) and
+pre-filter the candidate set.  Results are cached per shape.  All
+functions degrade to safe hardware-aligned defaults if no candidate
+survives.
 """
 from __future__ import annotations
 
@@ -15,9 +22,10 @@ import functools
 import math
 from typing import Tuple
 
-from repro.core import hardware, workload
-from repro.core.cost import systolic_gemm_cycles
-from repro.core.hardware import tpu_v5e
+from repro.core.batcheval import Topology, evaluate_specs_batch
+from repro.core.hardware import Arch, tpu_v5e
+from repro.core.ir import MappingSpec, evaluate_mapping
+from repro.core.workload import flash_attention, gemm_softmax, ssd_chunk
 
 __all__ = ["attention_blocks", "gemm_epilogue_blocks", "ssd_chunk_len",
            "VMEM_BUDGET"]
@@ -32,16 +40,34 @@ def _align(x: int, a: int = _LANE) -> int:
     return max(a, (x // a) * a)
 
 
+@functools.lru_cache(maxsize=4)
+def _kernel_arch() -> Arch:
+    """Single-chip view of the TPU for per-core block selection (the ICI
+    mesh is irrelevant to one kernel invocation)."""
+    return tpu_v5e(mesh=(1, 1))
+
+
+def _best_candidate(br) -> int:
+    """Lowest-latency candidate among memory-fit-valid mappings; when the
+    arch model rejects every candidate (the kernel VMEM pre-filter is the
+    binding constraint then), fall back to raw latency order."""
+    i = br.best_index("latency")
+    if i is not None:
+        return i
+    return min(range(br.size), key=lambda j: float(br.latency[j]))
+
+
 @functools.lru_cache(maxsize=256)
 def attention_blocks(sq: int, skv: int, d: int) -> Tuple[int, int]:
-    """(block_q, block_k) for the FlashAttention kernel via COMET search.
+    """(block_q, block_k) for the FlashAttention kernel via the batched
+    COMET evaluator on the flash-attention compound op.
 
     Working set per (bq, bk): q(bq,d) + k/v(bk,d)*2 + acc(bq,d) f32 +
     s(bq,bk) f32 (+ double buffering handled by budget halving).
     """
-    arch = tpu_v5e()
-    best = None
+    arch = _kernel_arch()
     cands = [128, 256, 512, 1024]
+    pairs = []
     for bq in cands:
         if bq > max(sq, _LANE):
             continue
@@ -52,31 +78,29 @@ def attention_blocks(sq: int, skv: int, d: int) -> Tuple[int, int]:
                     + 2 * bq * _LANE * 4)
             if vmem * 2 > VMEM_BUDGET:
                 continue
-            # COMET leaf costs: two MXU GEMM tiles + VPU online-softmax ops
-            u = arch.gemm_unit
-            g1 = systolic_gemm_cycles(bq, bk, d, u.array_rows, u.array_cols,
-                                      u.num_arrays) / u.freq_hz
-            g2 = systolic_gemm_cycles(bq, d, bk, u.array_rows, u.array_cols,
-                                      u.num_arrays) / u.freq_hz
-            simd = (5 * bq * bk + 6 * bq) / arch.simd_unit.peak_ops_per_sec
-            mem = (bq * d * 2 + 2 * bk * d * 2) / arch.gb.bandwidth
-            n_blocks = math.ceil(max(sq, 1) / bq) * math.ceil(max(skv, 1) / bk)
-            lat = n_blocks * max(g1 + g2 + simd, mem)
-            if best is None or lat < best[0]:
-                best = (lat, bq, bk)
-    if best is None:
+            pairs.append((bq, bk))
+    if not pairs:
         return (_LANE, _LANE)
-    return best[1], best[2]
+    M, N = max(sq, _LANE), max(skv, _LANE)
+    co = flash_attention(M, d, N, d)
+    topo = Topology(variant="fa", schedule="sequential")
+    br = evaluate_specs_batch(
+        co, arch, topo,
+        [math.ceil(M / bq) for bq, _ in pairs],
+        [1] * len(pairs),
+        [math.ceil(N / bk) for _, bk in pairs])
+    return pairs[_best_candidate(br)]
 
 
 @functools.lru_cache(maxsize=256)
 def gemm_epilogue_blocks(m: int, n: int, k: int) -> Tuple[int, int]:
-    """(block_m, block_k) for the fused GEMM-SM / GEMM-LN kernels.
+    """(block_m, block_k) for the fused GEMM-SM / GEMM-LN kernels via the
+    batched COMET evaluator on the gemm_softmax compound op.
 
     Constraint: acc (block_m, N) f32 + B slice (block_k, N) must fit VMEM.
     """
-    arch = tpu_v5e()
-    best = None
+    arch = _kernel_arch()
+    pairs = []
     for bm in (128, 256, 512):
         for bk in (128, 256, 512):
             if bk > max(k, _LANE):
@@ -84,19 +108,18 @@ def gemm_epilogue_blocks(m: int, n: int, k: int) -> Tuple[int, int]:
             vmem = bm * n * 4 + bk * n * 2 + bm * bk * 2 + bm * n * 2
             if vmem * 2 > VMEM_BUDGET:
                 continue
-            u = arch.gemm_unit
-            g = systolic_gemm_cycles(bm, n, bk, u.array_rows, u.array_cols,
-                                     u.num_arrays) / u.freq_hz
-            mem = (bm * bk * 2 + bk * n * 2) / arch.dram.bandwidth
-            n_iters = math.ceil(max(m, 1) / bm) * math.ceil(max(k, 1) / bk)
-            epi = (4 * bm * n) / arch.simd_unit.peak_ops_per_sec \
-                * math.ceil(max(m, 1) / bm)
-            lat = n_iters * max(g, mem) + epi
-            if best is None or lat < best[0]:
-                best = (lat, bm, bk)
-    if best is None:
+            pairs.append((bm, bk))
+    if not pairs:
         return (_LANE, _LANE)
-    return best[1], best[2]
+    M, K = max(m, _LANE), max(k, _LANE)
+    co = gemm_softmax(M, n, K)
+    topo = Topology(variant="fused_dist", schedule="sequential")
+    br = evaluate_specs_batch(
+        co, arch, topo,
+        [math.ceil(M / bm) for bm, _ in pairs],
+        [math.ceil(K / bk) for _, bk in pairs],
+        [1] * len(pairs))
+    return pairs[_best_candidate(br)]
 
 
 @functools.lru_cache(maxsize=256)
@@ -104,25 +127,23 @@ def ssd_chunk_len(s: int, p: int, n: int) -> int:
     """Chunk length for the SSD kernel via the COMET ssd_chunk compound op.
 
     Larger chunks amortize the state GEMMs but grow the (c, c) intra-chunk
-    matrix quadratically; COMET's cost model finds the knee.
+    matrix quadratically; the shared cost model finds the knee.  The chunk
+    length changes the compound op's dimensions themselves, so this sweeps
+    per-chunk workloads (scalar evaluations through the same model) rather
+    than a tiling grid.
     """
-    arch = tpu_v5e()
+    arch = _kernel_arch()
     best = None
-    u = arch.gemm_unit
     for c in (128, 256, 512):
         if c > max(s, _LANE):
             continue
         vmem = (c * p * 2 * 2 + 2 * c * n * 2 + c * c * 4 + n * p * 4)
         if vmem * 2 > VMEM_BUDGET:
             continue
-        # per-chunk: 3 GEMM tiles + decay SIMD; n_chunks = s/c
-        g = (systolic_gemm_cycles(c, c, n, u.array_rows, u.array_cols, u.num_arrays)
-             + systolic_gemm_cycles(c, p, c, u.array_rows, u.array_cols, u.num_arrays)
-             + systolic_gemm_cycles(n, p, c, u.array_rows, u.array_cols, u.num_arrays)
-             ) / u.freq_hz
-        simd = (3 * c * c + 2 * c * p) / arch.simd_unit.peak_ops_per_sec
-        mem = (c * p * 2 * 2 + 2 * c * n * 2) / arch.gb.bandwidth
-        lat = math.ceil(max(s, 1) / c) * max(g + simd, mem)
+        co = ssd_chunk(S=s, H=1, P=p, Dst=n, C=c)
+        r = evaluate_mapping(co, arch, MappingSpec(variant="fused_dist",
+                                                   m_tiles=1))
+        lat = math.ceil(max(s, 1) / c) * r.latency
         if best is None or lat < best[0]:
             best = (lat, c)
     return 128 if best is None else best[1]

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["gemm_layernorm", "gemm_rmsnorm"]
 
 
@@ -84,7 +87,7 @@ def _fused_gemm_norm(a, b, gamma, beta, *, eps, rms, block_m, block_k,
         out_specs=pl.BlockSpec((block_m, N), lambda mi, ki: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((Mp, N), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(ap, bp, g2, beta2)

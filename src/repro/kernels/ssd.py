@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["ssd_scan_fwd", "ssd_scan"]
 
 
@@ -99,7 +102,7 @@ def ssd_scan_fwd(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sp, P), xdt.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xdt, da3, B, C)

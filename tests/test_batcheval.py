@@ -1,0 +1,205 @@
+"""Tests for the vectorized batch map-space evaluation engine
+(core/batcheval.py), the exhaustive search mode, the shared evaluation
+caches and the parallel sweep driver."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import batcheval
+from repro.core.batcheval import (Topology, co_signature,
+                                  enumerate_topologies, evaluate_cached,
+                                  evaluate_specs_batch,
+                                  evaluate_topology_grid)
+from repro.core.hardware import cloud, edge
+from repro.core.ir import MappingSpec, evaluate_mapping
+from repro.core.search import (candidate_specs, search, search_many,
+                               _sample)
+from repro.core.workload import (attention, flash_attention, gemm_layernorm,
+                                 gemm_softmax, ssd_chunk)
+
+WORKLOADS = [
+    ("gemm_softmax", gemm_softmax(512, 1024, 128)),
+    ("gemm_layernorm", gemm_layernorm(512, 4096, 128)),
+    ("attention_prefill", attention(1024, 256, 1024, 256)),
+    ("attention_decode", attention(1, 128, 1024, 128)),
+    ("flash_attention", flash_attention(2048, 256, 2048, 256)),
+]
+ARCHS = [edge(), cloud()]
+
+
+# -------------------------------------------------- vectorized equivalence
+
+@pytest.mark.parametrize("wl_name,co", WORKLOADS,
+                         ids=[n for n, _ in WORKLOADS])
+@pytest.mark.parametrize("arch", ARCHS, ids=[a.name for a in ARCHS])
+def test_batch_matches_tree_path(wl_name, co, arch):
+    """Every grid point of every topology matches the per-spec
+    build_tree -> validate_tree -> CostModel path to 1e-9 relative
+    tolerance (they execute the same formulas, so in practice they are
+    bit-identical), including validity."""
+    cands = candidate_specs(co, arch)
+    rng = random.Random(0)
+    for topo in enumerate_topologies(co, cands):
+        br = evaluate_topology_grid(co, arch, topo, cands)
+        # sample a handful of points per topology to keep runtime down
+        idxs = {rng.randrange(br.size) for _ in range(8)} | {0, br.size - 1}
+        for i in idxs:
+            spec = br.spec_at(i)
+            try:
+                r = evaluate_mapping(co, arch, spec)
+            except (ValueError, KeyError):
+                assert not br.valid[i]
+                continue
+            assert bool(br.valid[i]) == r.valid
+            assert br.latency[i] == pytest.approx(r.latency, rel=1e-9)
+            assert br.energy_pj[i] == pytest.approx(r.energy_pj, rel=1e-9)
+
+
+def test_batch_specs_parallel_arrays():
+    """evaluate_specs_batch accepts explicit (m, k, n) candidate pairs
+    (the autotune use case), not just meshgrids."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    topo = Topology(variant="fused_dist", schedule="sequential")
+    m = [1, 2, 8, 64]
+    k = [1, 4, 2, 8]
+    br = evaluate_specs_batch(co, arch, topo, m, k, [1, 1, 1, 1])
+    assert br.size == 4
+    for i in range(4):
+        r = evaluate_mapping(co, arch, br.spec_at(i))
+        assert br.latency[i] == pytest.approx(r.latency, rel=1e-9)
+
+
+# ------------------------------------------- exhaustive vs randomized
+
+@pytest.mark.parametrize("wl_name,co", WORKLOADS,
+                         ids=[n for n, _ in WORKLOADS])
+@pytest.mark.parametrize("arch", ARCHS, ids=[a.name for a in ARCHS])
+def test_exhaustive_no_worse_than_randomized(wl_name, co, arch):
+    ex = search(co, arch, mode="exhaustive")
+    assert ex.mode == "exhaustive"
+    assert ex.best.valid
+    for seed in (0, 1, 7):
+        rd = search(co, arch, mode="randomized", budget=500, seed=seed)
+        assert ex.latency <= rd.latency * (1 + 1e-12), \
+            f"exhaustive worse than randomized seed={seed}"
+
+
+def test_search_auto_picks_exhaustive_and_is_deterministic():
+    co = gemm_softmax(512, 2048, 128)
+    arch = cloud()
+    r1 = search(co, arch)
+    r2 = search(co, arch)
+    assert r1.mode == "exhaustive" == r2.mode
+    assert r1.latency == r2.latency
+    assert r1.evaluated == r2.evaluated
+    # full space covered: evaluated == topologies x grid
+    cands = candidate_specs(co, arch)
+    expect = (len(enumerate_topologies(co, cands))
+              * batcheval.grid_size(co, cands))
+    assert r1.evaluated == expect
+
+
+def test_search_objectives():
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    lat = search(co, arch, objective="latency")
+    en = search(co, arch, objective="energy")
+    edp = search(co, arch, objective="edp")
+    assert lat.latency <= en.latency * (1 + 1e-12)
+    assert en.energy_pj <= lat.energy_pj * (1 + 1e-12)
+    assert (edp.latency * edp.energy_pj
+            <= lat.latency * lat.energy_pj * (1 + 1e-12))
+
+
+def test_exhaustive_falls_back_when_space_too_large():
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    r = search(co, arch, exhaustive_limit=10, budget=200, seed=0)
+    assert r.mode == "randomized"
+
+
+def test_generic_workload_exhaustive():
+    co = ssd_chunk(S=2048, H=1, P=64, Dst=128, C=256)
+    from repro.core.hardware import tpu_v5e
+    arch = tpu_v5e((1, 1))
+    r = search(co, arch)
+    assert r.mode == "exhaustive"
+    assert r.best.valid and r.latency > 0
+
+
+# ----------------------------------------------------------------- caches
+
+def test_grid_cache_hits():
+    batcheval.cache_clear()
+    co = gemm_softmax(256, 1024, 64)
+    arch = edge()
+    cands = candidate_specs(co, arch)
+    topo = enumerate_topologies(co, cands)[0]
+    br1 = evaluate_topology_grid(co, arch, topo, cands)
+    info1 = batcheval.cache_info()["grid"]
+    br2 = evaluate_topology_grid(co, arch, topo, cands)
+    info2 = batcheval.cache_info()["grid"]
+    assert info2["hits"] == info1["hits"] + 1
+    assert br2 is br1          # same cached object
+    # a different arch is a different cache line
+    evaluate_topology_grid(co, cloud(), topo, cands)
+    assert batcheval.cache_info()["grid"]["misses"] == info2["misses"] + 1
+
+
+def test_spec_cache_hits_and_rejections():
+    batcheval.cache_clear()
+    co = gemm_softmax(256, 1024, 64)
+    arch = edge()
+    spec = MappingSpec(variant="fused_dist", m_tiles=8, k_tiles=2)
+    r1 = evaluate_cached(co, arch, spec)
+    h0 = batcheval.cache_info()["spec"]["hits"]
+    r2 = evaluate_cached(co, arch, spec)
+    assert batcheval.cache_info()["spec"]["hits"] == h0 + 1
+    assert r1 == r2
+    ref = evaluate_mapping(co, arch, spec)
+    assert r1 == (ref.latency, ref.energy_pj, ref.valid)
+    # rejected specs (scalar path raises) cache as None both times
+    bad = MappingSpec(variant="fa")    # wrong builder family
+    assert evaluate_cached(co, arch, bad) is None
+    assert evaluate_cached(co, arch, bad) is None
+
+
+def test_co_signature_distinguishes_shapes():
+    assert co_signature(gemm_softmax(256, 1024, 64)) != \
+        co_signature(gemm_softmax(256, 1024, 128))
+    assert co_signature(gemm_softmax(256, 1024, 64)) == \
+        co_signature(gemm_softmax(256, 1024, 64))
+
+
+# ----------------------------------------------------------- sweep driver
+
+def test_search_many_matches_serial_order():
+    jobs = [(gemm_softmax(256, 1024, 128), edge(), {"variants": [v]})
+            for v in ("unfused", "fused_epilogue", "fused_std", "fused_dist")]
+    par = search_many(jobs)
+    ser = search_many(jobs, executor="serial")
+    assert [r.latency for r in par] == [r.latency for r in ser]
+    assert [r.best.spec.variant for r in par] == \
+        ["unfused", "fused_epilogue", "fused_std", "fused_dist"]
+
+
+# -------------------------------------------------- autotune integration
+
+def test_autotune_uses_shared_engine():
+    """Block selection routes through the batched evaluator (no local
+    mini cost models) and still respects the kernel VMEM constraints."""
+    import inspect
+
+    from repro.kernels import autotune
+
+    src = inspect.getsource(autotune)
+    assert "evaluate_specs_batch" in src
+    assert "systolic_gemm_cycles" not in src   # the old mini-model hook
+    bq, bk = autotune.attention_blocks(1024, 1024, 64)
+    assert bq % 128 == 0 and bk % 128 == 0
+    bm, bk2 = autotune.gemm_epilogue_blocks(512, 4096, 128)
+    assert (bm * 4096 * 4 + bk2 * 4096 * 2 + bm * bk2 * 2
+            + bm * 4096 * 2) * 2 <= autotune.VMEM_BUDGET

@@ -1,6 +1,10 @@
 """Hypothesis property-based tests on the system's invariants."""
 import math
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gemm_layernorm, gemm_softmax
