@@ -11,6 +11,7 @@ from typing import Dict, List, Tuple
 
 from repro.core import (attention, flash_attention, gemm_layernorm,
                         gemm_softmax)
+from repro.core.batcheval import Topology, evaluate_specs_batch
 from repro.core.hardware import cloud, edge
 from repro.core.ir import MappingSpec, evaluate_mapping
 from repro.core.search import search_many
@@ -109,24 +110,53 @@ def attention_variants() -> Dict:
 
 
 def breakdowns() -> Dict:
-    """Figs 8/9: latency breakdown of distSM vs SM mappings per GEMM."""
+    """Figs 8/9: latency breakdown of distSM vs SM mappings per GEMM.
+
+    Both mappings of each shape run through the batched SoA evaluator with
+    ``track_breakdown=True`` — no scalar tree walk: the per-key breakdown
+    arrays come out of the same vectorized pass as the totals.
+    """
     out = {}
     for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud())):
         for i, (M, N, K) in enumerate(shapes):
             co = gemm_softmax(M, N, K)
-            dist = evaluate_mapping(co, arch, MappingSpec(
-                variant="fused_dist", m_tiles=min(8, M), k_tiles=2))
-            std = evaluate_mapping(co, arch, MappingSpec(
-                variant="fused_std", m_tiles=min(8, M), k_tiles=2))
-            for tag, r in (("distSM", dist), ("SM", std)):
-                bd = r.cost.lat_breakdown
+            for tag, variant in (("distSM", "fused_dist"), ("SM", "fused_std")):
+                br = evaluate_specs_batch(
+                    co, arch, Topology(variant=variant),
+                    [min(8, M)], [2], [1], track_breakdown=True)
+                bd = br.lat_breakdown_at(0)
                 top = max(bd, key=bd.get)
                 print(f"breakdown_{arch.name}_G{i+1}_{tag},"
-                      f"{r.latency*1e6:.2f},dominant={top};"
+                      f"{float(br.latency[0])*1e6:.2f},dominant={top};"
                       + ";".join(f"{k}={v*1e6:.1f}us"
                                  for k, v in bd.items() if v > 0))
                 out[f"{arch.name}_G{i+1}_{tag}"] = top
     return out
+
+
+def pareto_fronts() -> Dict:
+    """Beyond-scalar objectives: the latency/energy Pareto front of every
+    (shape, arch) gemm_softmax space, extracted vectorized from the SoA
+    grids (``objective='pareto'``).  Prints front size and both endpoints;
+    the front's min latency always matches the scalar-latency optimum."""
+    jobs = [(gemm_softmax(M, N, K), arch, {"objective": "pareto"})
+            for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud()))
+            for (M, N, K) in shapes]
+    results = iter(search_many(jobs))
+    sizes = []
+    for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud())):
+        for i, (M, N, K) in enumerate(shapes):
+            r = next(results)
+            front = r.front
+            lat_lo, en_hi, _ = front[0]     # min latency end
+            lat_hi, en_lo, _ = front[-1]    # min energy end
+            sizes.append(len(front))
+            print(f"pareto_{arch.name}_G{i+1},{lat_lo*1e6:.2f},"
+                  f"front={len(front)};"
+                  f"lat_span={lat_lo*1e6:.1f}..{lat_hi*1e6:.1f}us;"
+                  f"energy_span={en_lo/1e6:.2f}..{en_hi/1e6:.2f}uJ")
+    print(f"pareto_geomean,0,mean_front_size={sum(sizes)/len(sizes):.1f}")
+    return {"front_sizes": sizes}
 
 
 def mapping_variation() -> Dict:
@@ -190,14 +220,16 @@ def run_all() -> Dict:
     ln = fusion_comparison(gemm_layernorm, "gemm_ln", 3.46)
     print("# --- Fig 12: attention variants ---")
     at = attention_variants()
-    print("# --- Fig 8/9: breakdowns ---")
+    print("# --- Fig 8/9: breakdowns (batched) ---")
     bd = breakdowns()
+    print("# --- latency/energy Pareto fronts ---")
+    pf = pareto_fronts()
     print("# --- Fig 7: mapping variation ---")
     mv = mapping_variation()
     print("# --- beyond-paper: stats-granularity collectives ---")
     bp = beyond_paper_stats_collectives()
     return {"gemm_sm": sm, "gemm_ln": ln, "attention": at,
-            "breakdowns": bd, "variation": mv, "beyond": bp}
+            "breakdowns": bd, "pareto": pf, "variation": mv, "beyond": bp}
 
 
 if __name__ == "__main__":

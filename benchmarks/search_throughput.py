@@ -8,13 +8,20 @@ Measures mappings/sec through
 * the **batched engine** (core/batcheval.py): the same space evaluated
   topology-by-topology in vectorized structure-of-arrays passes,
 
-on the paper's gemm_softmax and attention spaces, and cross-checks that
-exhaustive search returns latency <= the seed randomized search on every
-(workload, arch) pair of ``paper_tables.py``.
+on the paper's gemm_softmax and attention spaces.  Each space is measured
+twice: on the **legacy axes** (spatial fanouts pinned to the arch
+maximum, as in the PR 1 engine — the mappings/sec floor guards against
+regressions there) and on the **full grid** (sp_cluster x sp_core x
+schedule folded into the SoA pass).  It also cross-checks, on every
+(workload, arch) pair of ``paper_tables.py``, that
+
+* exhaustive search returns latency <= the seed randomized search, and
+* the Pareto front's best latency <= the scalar-latency optimum (the
+  front must be superset-quality, never worse than the scalar objective).
 
 Emits ``BENCH_search.json`` (schema documented in benchmarks/README.md)
 and prints ``name,us_per_call,derived`` CSV rows.  Exits non-zero if the
-speedup floor or the exhaustive<=randomized invariant is violated.
+speedup floor or either invariant is violated.
 """
 from __future__ import annotations
 
@@ -89,24 +96,31 @@ def _batch_throughput(co, arch, cands, repeats: int = 3) -> Dict:
     return {"cold": cold, "warm": warm, "topologies": len(topos)}
 
 
-def measure_space(name: str, co, arch) -> Dict:
+def measure_space(name: str, co, arch, axes: str = "full") -> Dict:
+    """``axes='legacy'`` pins the spatial fanouts to the arch maximum
+    (sp_cluster = sp_core = 0), i.e. the PR 1 space — its mappings/sec is
+    the no-regression reference; ``'full'`` measures the enlarged grid."""
     cands = candidate_specs(co, arch)
+    if axes == "legacy":
+        cands = dict(cands, sp_cluster=[0], sp_core=[0])
     tree = _tree_throughput(co, arch, cands)
     batch = _batch_throughput(co, arch, cands)
     speedup = batch["cold"]["mappings_per_sec"] / tree["mappings_per_sec"]
-    print(f"search_throughput_{name},"
+    print(f"search_throughput_{name}_{axes},"
           f"{1e6 / batch['cold']['mappings_per_sec']:.2f},"
           f"tree={tree['mappings_per_sec']:.0f}/s;"
           f"batch={batch['cold']['mappings_per_sec']:.0f}/s;"
           f"speedup={speedup:.1f}x;"
           f"space={batch['cold']['mappings']}specs")
-    return {"workload": name, "arch": arch.name, "tree": tree,
+    return {"workload": name, "arch": arch.name, "axes": axes, "tree": tree,
             "batch": batch, "speedup": speedup}
 
 
 def exhaustive_vs_seed_randomized() -> List[Dict]:
     """Every (workload, arch) pair of paper_tables.py: exhaustive search
-    must return latency <= the seed's randomized search result."""
+    must return latency <= the seed's randomized search result, and the
+    Pareto front must be superset-quality (its best-latency point <= the
+    scalar-latency optimum — the front always contains the optimum)."""
     from benchmarks.paper_tables import (ATTN_CLOUD, ATTN_EDGE, BUDGET,
                                          GEMMS_CLOUD, GEMMS_EDGE)
     from repro.core.workload import gemm_layernorm
@@ -125,13 +139,17 @@ def exhaustive_vs_seed_randomized() -> List[Dict]:
     for name, co, arch in rows:
         ex = search(co, arch, mode="exhaustive")
         rd = search(co, arch, mode="randomized", budget=BUDGET, seed=1)
+        pf = search(co, arch, mode="exhaustive", objective="pareto")
         out.append({
             "workload": name,
             "dims": dict(co.dim_sizes),
             "arch": arch.name,
             "exhaustive_latency_s": ex.latency,
             "randomized_latency_s": rd.latency,
-            "ok": ex.latency <= rd.latency * (1 + 1e-12),
+            "pareto_front_size": len(pf.front),
+            "pareto_best_latency_s": pf.front[0][0],
+            "ok": (ex.latency <= rd.latency * (1 + 1e-12)
+                   and pf.front[0][0] <= ex.latency * (1 + 1e-12)),
         })
     bad = [r for r in out if not r["ok"]]
     print(f"exhaustive_vs_randomized,0,pairs={len(out)};regressions={len(bad)}")
@@ -140,12 +158,18 @@ def exhaustive_vs_seed_randomized() -> List[Dict]:
 
 def run_all(out_path: str = "BENCH_search.json") -> Dict:
     spaces = [
-        measure_space("gemm_softmax", gemm_softmax(512, 1024, 128), edge()),
-        measure_space("attention", attention(1024, 256, 1024, 256), edge()),
+        measure_space("gemm_softmax", gemm_softmax(512, 1024, 128), edge(),
+                      axes="legacy"),
+        measure_space("attention", attention(1024, 256, 1024, 256), edge(),
+                      axes="legacy"),
+        measure_space("gemm_softmax", gemm_softmax(512, 1024, 128), edge(),
+                      axes="full"),
+        measure_space("attention", attention(1024, 256, 1024, 256), edge(),
+                      axes="full"),
     ]
     pairs = exhaustive_vs_seed_randomized()
     result = {
-        "schema": "comet/search_throughput/v1",
+        "schema": "comet/search_throughput/v2",
         "speedup_floor": SPEEDUP_FLOOR,
         "spaces": spaces,
         "exhaustive_vs_randomized": pairs,

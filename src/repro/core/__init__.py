@@ -3,7 +3,7 @@
 from . import (batcheval, collectives, cost, hardware, ir, mapping, search,
                validate, workload, yamlio)
 from .batcheval import (BatchResult, Topology, evaluate_specs_batch,
-                        evaluate_topology_grid)
+                        evaluate_topology_grid, pareto_merge)
 from .hardware import Arch, cloud, edge, tpu_v5e
 from .ir import MappingResult, MappingSpec, build_tree, evaluate_mapping
 from .search import SearchResult, search as map_search, search_many
@@ -15,7 +15,7 @@ __all__ = [
     "MappingResult", "MappingSpec", "build_tree", "evaluate_mapping",
     "SearchResult", "map_search", "search_many",
     "BatchResult", "Topology", "evaluate_specs_batch",
-    "evaluate_topology_grid",
+    "evaluate_topology_grid", "pareto_merge",
     "CompoundOp", "attention", "flash_attention", "gemm",
     "gemm_layernorm", "gemm_softmax", "ssd_chunk",
 ]

@@ -3,42 +3,58 @@
 The mapping space of Fig. 1 factors into
 
 * a **topology** — the discrete shape of the mapping tree: fusion variant
-  x schedule x collective granularity x GB loop order.  A compound op has
-  only a handful of topologies, and the tree structure (nodes, labels,
-  tensors, collectives) is fully determined by the topology; and
-* **numeric tiling parameters** — the m/k/n temporal tile counts, which
-  only change Loop factors, tile sizes and collective data volumes.
+  x collective granularity x GB loop order.  A compound op has only a
+  handful of topologies, and the tree structure (nodes, labels, tensors,
+  collectives) is fully determined by the topology; and
+* **grid axes** — the m/k/n temporal tile counts, the ``sp_cluster``/
+  ``sp_core`` spatial unrolling fanouts and the ``schedule`` choice.
+  Tile counts and fanouts only change Loop factors, tile sizes, collective
+  participants and data volumes; the schedule enters Eqs. 5-7 as a
+  mask-select (True = pipelined) rather than a separate tree build, which
+  halves the topology count per space.
 
-Exploiting that, one topology's entire numeric grid is evaluated in a
-single structure-of-arrays pass: ``build_tree`` is called once with NumPy
-int arrays for the tiling parameters, and the unchanged Eq. 1-7 formulas
-in :mod:`.cost`, :mod:`.collectives` and :mod:`.validate` broadcast
-through the tree.  Results are bit-identical to the per-spec path (same
-code, same formulas) at a fraction of the per-mapping Python overhead.
+Exploiting that, one topology's entire grid is evaluated in a single
+structure-of-arrays pass: ``build_tree`` is called once with NumPy int
+arrays for the tiling/fanout parameters (plus the schedule mask), and the
+unchanged Eq. 1-7 formulas in :mod:`.cost`, :mod:`.collectives` and
+:mod:`.validate` broadcast through the tree.  Results are bit-identical to
+the per-spec path (same code, same formulas) at a fraction of the
+per-mapping Python overhead.  ``track_breakdown=True`` additionally
+carries the per-key latency/energy breakdown dicts through the same SoA
+pass (used by the benchmark breakdown figures — no scalar tree walk).
+
+:meth:`BatchResult.pareto_front` extracts the latency/energy Pareto front
+of a grid as a vectorized skyline (argsort + running min), and
+``objective='pareto'`` in :func:`repro.core.search.search` merges the
+per-topology fronts into a global front.
 
 Two LRU caches sit on top:
 
-* a **grid cache** keyed on (compound-op signature, arch name, topology,
-  candidate axes) holding whole :class:`BatchResult` arrays, and
-* a **spec cache** keyed on (compound-op signature, arch name, spec)
-  holding lightweight (latency, energy, valid) triples for the randomized
-  fallback path.
+* a **grid cache** keyed on (compound-op signature, ``Arch.signature()``,
+  topology, candidate axes) holding whole :class:`BatchResult` arrays, and
+* a **spec cache** keyed on (compound-op signature, ``Arch.signature()``,
+  spec) holding lightweight (latency, energy, valid) triples for the
+  randomized fallback path.
 
-Both are shared across searches (see :func:`repro.core.search.search` and
-``search_many``).
+Cache keys use the *full architecture parameter signature*
+(:meth:`repro.core.hardware.Arch.signature`), never ``arch.name`` alone:
+two Arch instances sharing a name but differing in bandwidth/capacity
+must not reuse each other's results.  Both caches are shared across
+searches (see :func:`repro.core.search.search` and ``search_many``).
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost import CostModel
+from .cost import ENERGY_KEYS, LAT_KEYS, CostModel
 from .hardware import Arch
 from .ir import MappingSpec, build_tree
+from .mapping import SCHEDULES
 from .validate import validity_mask
 from .workload import CompoundOp
 
@@ -51,6 +67,7 @@ __all__ = [
     "evaluate_specs_batch",
     "evaluate_topology_grid",
     "evaluate_cached",
+    "pareto_merge",
     "cache_info",
     "cache_clear",
 ]
@@ -58,38 +75,52 @@ __all__ = [
 GEMM_EPILOGUE_COS = ("gemm", "gemm_softmax", "gemm_layernorm")
 ATTENTION_COS = ("attention", "flash_attention")
 
-OBJECTIVES = ("latency", "energy", "edp")
+OBJECTIVES = ("latency", "energy", "edp", "pareto")
 
 
 @dataclass(frozen=True)
 class Topology:
-    """The discrete (non-numeric) part of a MappingSpec."""
+    """The discrete (non-numeric) part of a MappingSpec.
+
+    ``schedule`` is retained for API compatibility (explicit
+    ``evaluate_specs_batch`` callers may pin it) but is no longer a
+    topology axis: grids enumerate it via the schedule mask instead.
+    """
 
     variant: str
     schedule: str = "sequential"
     collective_gran: str = "tile"
     loop_order_gb: Tuple[str, ...] = ("M", "N")
 
-    def spec(self, m_tiles: int = 1, k_tiles: int = 1,
-             n_tiles: int = 1) -> MappingSpec:
+    def spec(self, m_tiles: int = 1, k_tiles: int = 1, n_tiles: int = 1,
+             sp_cluster: int = 0, sp_core: int = 0,
+             schedule: Optional[str] = None) -> MappingSpec:
         return MappingSpec(
             variant=self.variant, m_tiles=m_tiles, k_tiles=k_tiles,
-            n_tiles=n_tiles, schedule=self.schedule,
+            n_tiles=n_tiles, sp_cluster=sp_cluster, sp_core=sp_core,
+            schedule=self.schedule if schedule is None else schedule,
             collective_gran=self.collective_gran,
             loop_order_gb=self.loop_order_gb)
 
 
 @dataclass
 class BatchResult:
-    """Structure-of-arrays result of one topology's numeric grid."""
+    """Structure-of-arrays result of one topology's grid."""
 
     topo: Topology
     m_tiles: np.ndarray
     k_tiles: np.ndarray
     n_tiles: np.ndarray
+    sp_cluster: np.ndarray
+    sp_core: np.ndarray
+    schedule: np.ndarray            # per-point schedule names (str array)
     latency: np.ndarray
     energy_pj: np.ndarray
     valid: np.ndarray
+    # Per-key breakdown arrays (same shape), present only when the batch
+    # was evaluated with track_breakdown=True.
+    lat_breakdown: Optional[Dict[str, np.ndarray]] = None
+    energy_breakdown: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def size(self) -> int:
@@ -104,7 +135,7 @@ class BatchResult:
         elif objective == "edp":
             s = self.latency * self.energy_pj
         else:
-            raise ValueError(f"unknown objective {objective!r}")
+            raise ValueError(f"unknown scalar objective {objective!r}")
         return np.where(self.valid, s, np.inf)
 
     def best_index(self, objective: str = "latency") -> Optional[int]:
@@ -112,9 +143,60 @@ class BatchResult:
             return None
         return int(np.argmin(self.scores(objective)))
 
+    def pareto_front(self) -> np.ndarray:
+        """Indices of the non-dominated (latency, energy) points among the
+        valid grid entries, in ascending-latency order.
+
+        Vectorized 2-D skyline: lexsort by (latency, energy), then a point
+        survives iff its energy is strictly below the running minimum of
+        all points with better-or-equal latency (weakly dominated points
+        and duplicates are dropped).
+        """
+        idx = np.flatnonzero(self.valid)
+        if idx.size == 0:
+            return idx
+        lat = self.latency[idx]
+        en = self.energy_pj[idx]
+        order = np.lexsort((en, lat))
+        en_s = en[order]
+        cummin = np.minimum.accumulate(en_s)
+        keep = np.ones(order.size, dtype=bool)
+        keep[1:] = en_s[1:] < cummin[:-1]
+        return idx[order[keep]]
+
     def spec_at(self, i: int) -> MappingSpec:
-        return self.topo.spec(int(self.m_tiles[i]), int(self.k_tiles[i]),
-                              int(self.n_tiles[i]))
+        return self.topo.spec(
+            int(self.m_tiles[i]), int(self.k_tiles[i]), int(self.n_tiles[i]),
+            sp_cluster=int(self.sp_cluster[i]), sp_core=int(self.sp_core[i]),
+            schedule=str(self.schedule[i]))
+
+    def _breakdown_at(self, bd: Dict[str, np.ndarray], i: int) -> Dict[str, float]:
+        return {k: float(np.broadcast_to(np.asarray(v, dtype=np.float64),
+                                         self.latency.shape)[i])
+                for k, v in bd.items()}
+
+    def lat_breakdown_at(self, i: int) -> Dict[str, float]:
+        if self.lat_breakdown is None:
+            raise ValueError("batch evaluated without track_breakdown")
+        return self._breakdown_at(self.lat_breakdown, i)
+
+    def energy_breakdown_at(self, i: int) -> Dict[str, float]:
+        if self.energy_breakdown is None:
+            raise ValueError("batch evaluated without track_breakdown")
+        return self._breakdown_at(self.energy_breakdown, i)
+
+
+def pareto_merge(points: Sequence[Tuple]) -> List[Tuple]:
+    """Skyline of ``(latency, energy, *payload)`` tuples: the merged
+    latency/energy Pareto front across several :class:`BatchResult` fronts
+    (ascending latency, strictly descending energy)."""
+    best_en = np.inf
+    out: List[Tuple] = []
+    for p in sorted(points, key=lambda p: (p[0], p[1])):
+        if p[1] < best_en:
+            out.append(p)
+            best_en = p[1]
+    return out
 
 
 # ------------------------------------------------------------- signatures
@@ -132,25 +214,30 @@ def co_signature(co: CompoundOp) -> Tuple:
     )
 
 
+NUMERIC_AXES = ("m_tiles", "k_tiles", "n_tiles", "sp_cluster", "sp_core")
+
+
 def numeric_axes(co: CompoundOp) -> Tuple[str, ...]:
     """Which numeric MappingSpec axes actually reach the tree builder for
-    this compound op (the rest are degenerate and pinned to 1)."""
+    this compound op (the rest are degenerate and pinned).  The spatial
+    fanout axes apply to every builder family."""
     if co.name in GEMM_EPILOGUE_COS:
-        return ("m_tiles", "k_tiles")
+        return ("m_tiles", "k_tiles", "sp_cluster", "sp_core")
     if co.name in ATTENTION_COS:
-        return ("m_tiles", "n_tiles")
-    return ("m_tiles",)
+        return ("m_tiles", "n_tiles", "sp_cluster", "sp_core")
+    return ("m_tiles", "sp_cluster", "sp_core")
 
 
 def topology_fields(co: CompoundOp) -> Tuple[str, ...]:
     """Which discrete MappingSpec fields alter the tree for this compound
     op.  GEMM-epilogue trees ignore the GB loop order; attention trees
     ignore the collective granularity; the generic builder only branches
-    on fused-vs-unfused."""
+    on fused-vs-unfused.  ``schedule`` is never a topology field: the
+    batched engine folds it into the grid as an Eq. 5-7 mask-select."""
     if co.name in GEMM_EPILOGUE_COS:
-        return ("variant", "schedule", "collective_gran")
+        return ("variant", "collective_gran")
     if co.name in ATTENTION_COS:
-        return ("variant", "schedule", "loop_order_gb")
+        return ("variant", "loop_order_gb")
     return ("variant",)
 
 
@@ -181,17 +268,47 @@ def enumerate_topologies(co: CompoundOp,
 
 def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
                          m_tiles: Sequence[int], k_tiles: Sequence[int],
-                         n_tiles: Sequence[int]) -> BatchResult:
-    """Evaluate parallel arrays of (m, k, n) tile counts for one topology
-    in a single vectorized pass."""
+                         n_tiles: Sequence[int],
+                         sp_cluster: Optional[Sequence[int]] = None,
+                         sp_core: Optional[Sequence[int]] = None,
+                         schedule: Optional[Sequence[str]] = None, *,
+                         track_breakdown: bool = False) -> BatchResult:
+    """Evaluate parallel arrays of (m, k, n[, sp_cluster, sp_core,
+    schedule]) grid points for one topology in a single vectorized pass.
+
+    ``sp_cluster``/``sp_core`` default to 0 (= full architecture fanout);
+    ``schedule`` is a parallel array of schedule *names* defaulting to the
+    topology's pinned schedule.  With ``track_breakdown=True`` the result
+    carries per-key latency/energy breakdown arrays.
+    """
     m = np.asarray(m_tiles, dtype=np.int64)
     k = np.asarray(k_tiles, dtype=np.int64)
     n = np.asarray(n_tiles, dtype=np.int64)
-    m, k, n = np.broadcast_arrays(m, k, n)
+    spc = (np.asarray(sp_cluster, dtype=np.int64)
+           if sp_cluster is not None else np.asarray(0, dtype=np.int64))
+    spo = (np.asarray(sp_core, dtype=np.int64)
+           if sp_core is not None else np.asarray(0, dtype=np.int64))
+    if schedule is not None:
+        sched_names = np.asarray(schedule)
+        bad = set(np.unique(sched_names).tolist()) - set(SCHEDULES)
+        if bad:
+            # mirror the scalar path, which rejects unknown schedule names
+            # at TileNode construction
+            raise ValueError(f"bad schedule {sorted(bad)}")
+        sched_mask = sched_names != "sequential"
+        m, k, n, spc, spo, sched_mask = np.broadcast_arrays(
+            m, k, n, spc, spo, sched_mask)
+        sched_names = np.broadcast_to(sched_names, m.shape)
+        spec_schedule = sched_mask
+    else:
+        m, k, n, spc, spo = np.broadcast_arrays(m, k, n, spc, spo)
+        sched_names = np.broadcast_to(np.asarray(topo.schedule), m.shape)
+        spec_schedule = topo.schedule
     shape = m.shape
     spec = MappingSpec(
         variant=topo.variant, m_tiles=m, k_tiles=k, n_tiles=n,
-        schedule=topo.schedule, collective_gran=topo.collective_gran,
+        sp_cluster=spc, sp_core=spo, schedule=spec_schedule,
+        collective_gran=topo.collective_gran,
         loop_order_gb=topo.loop_order_gb)
     try:
         root, tiling = build_tree(co, arch, spec)
@@ -199,34 +316,48 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
         # Whole topology rejected (e.g. unknown variant for this builder):
         # mirror the scalar path, which skips these specs.
         zeros = np.zeros(shape)
-        return BatchResult(topo, m, k, n, zeros, zeros,
-                           np.zeros(shape, dtype=bool))
+        return BatchResult(
+            topo, m, k, n, spc, spo, sched_names,
+            zeros, zeros, np.zeros(shape, dtype=bool),
+            lat_breakdown={k_: zeros for k_ in LAT_KEYS}
+            if track_breakdown else None,
+            energy_breakdown={k_: zeros for k_ in ENERGY_KEYS}
+            if track_breakdown else None)
     valid = np.broadcast_to(
         validity_mask(root, arch, tiling, co.tensors), shape).copy()
     cost = CostModel(arch, tiling, co.tensors,
-                     track_breakdown=False).evaluate(root)
+                     track_breakdown=track_breakdown).evaluate(root)
     latency = np.ascontiguousarray(
         np.broadcast_to(np.asarray(cost.latency, dtype=np.float64), shape))
     energy = np.ascontiguousarray(
         np.broadcast_to(np.asarray(cost.energy_pj, dtype=np.float64), shape))
-    return BatchResult(topo, m, k, n, latency, energy, valid)
+    lat_bd = dict(cost.lat_breakdown) if track_breakdown else None
+    en_bd = dict(cost.energy_breakdown) if track_breakdown else None
+    return BatchResult(topo, m, k, n, spc, spo, sched_names,
+                       latency, energy, valid,
+                       lat_breakdown=lat_bd, energy_breakdown=en_bd)
 
 
-def _grid_arrays(co: CompoundOp, cands: Dict[str, List]
-                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def _grid_arrays(co: CompoundOp, cands: Dict[str, List]) -> Tuple[np.ndarray, ...]:
+    """Flattened meshgrid over the numeric axes + the schedule axis:
+    (m, k, n, sp_cluster, sp_core, schedule-names) parallel arrays."""
     axes = numeric_axes(co)
     per_axis = [np.asarray(cands[ax], dtype=np.int64) if ax in axes
-                else np.asarray([1], dtype=np.int64)
-                for ax in ("m_tiles", "k_tiles", "n_tiles")]
+                else np.asarray([0 if ax.startswith("sp_") else 1],
+                                dtype=np.int64)
+                for ax in NUMERIC_AXES]
+    per_axis.append(np.asarray(cands["schedule"]))
     mg = np.meshgrid(*per_axis, indexing="ij")
     return tuple(g.reshape(-1) for g in mg)
 
 
 def grid_size(co: CompoundOp, cands: Dict[str, List]) -> int:
-    """Number of grid points per topology for this compound op."""
-    n = 1
+    """Number of grid points per topology for this compound op (numeric
+    axes x the schedule axis).  Missing axes count as pinned (PR 1-shaped
+    candidate dicts without sp_*/schedule keys remain accepted)."""
+    n = len(cands.get("schedule", ("sequential",)))
     for ax in numeric_axes(co):
-        n *= len(cands[ax])
+        n *= len(cands.get(ax, (0,)))
     return n
 
 
@@ -288,15 +419,24 @@ def cache_clear() -> None:
 def evaluate_topology_grid(co: CompoundOp, arch: Arch, topo: Topology,
                            cands: Dict[str, List]) -> BatchResult:
     """Whole-grid evaluation of one topology, LRU-cached on the compound
-    op signature, arch name, topology and candidate axes."""
-    key = (co_signature(co), arch.name, topo,
-           tuple(cands["m_tiles"]), tuple(cands["k_tiles"]),
-           tuple(cands["n_tiles"]))
+    op signature, the full arch parameter signature, the topology and the
+    candidate axes (tiling, spatial fanouts and schedules).  Candidate
+    dicts without the sp_*/schedule axes (the PR 1 shape) pin them to the
+    auto fanout / the topology's schedule."""
+    full = dict(cands)
+    full.setdefault("sp_cluster", [0])
+    full.setdefault("sp_core", [0])
+    full.setdefault("schedule", [topo.schedule])
+    key = (co_signature(co), arch.signature(), topo,
+           tuple(full["m_tiles"]), tuple(full["k_tiles"]),
+           tuple(full["n_tiles"]),
+           tuple(full["sp_cluster"]), tuple(full["sp_core"]),
+           tuple(full["schedule"]))
     hit = _GRID_CACHE.get(key)
     if hit is not None:
         return hit
-    m, k, n = _grid_arrays(co, cands)
-    br = evaluate_specs_batch(co, arch, topo, m, k, n)
+    m, k, n, spc, spo, sched = _grid_arrays(co, full)
+    br = evaluate_specs_batch(co, arch, topo, m, k, n, spc, spo, sched)
     _GRID_CACHE.put(key, br)
     return br
 
@@ -306,7 +446,7 @@ def evaluate_cached(co: CompoundOp, arch: Arch, spec: MappingSpec
     """Lightweight cached per-spec evaluation: (latency, energy_pj, valid),
     or None when the spec is rejected outright (the scalar path raises).
     Shared by the randomized search fallback across searches."""
-    key = (co_signature(co), arch.name, spec)
+    key = (co_signature(co), arch.signature(), spec)
     hit = _SPEC_CACHE.get(key)
     if hit is not None:
         return hit if hit != () else None

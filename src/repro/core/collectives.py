@@ -84,7 +84,16 @@ def collective_cost(
     Gather/Broadcast: tree over log2 P steps, total (P-1)/P * DV through
     the root.  All-to-all: each node exchanges DV*(P-1)/P in P-1 direct
     transfers (paired exchange schedule).
+
+    ``participants`` may be a NumPy int array (the batched engine folds
+    the spatial-fanout axes into its grid, so CO nodes carry one
+    participant count per grid point); the result is then a
+    :class:`CollectiveCost` of arrays, computed per unique participant
+    count through this same scalar-P code so both paths share one formula.
     """
+    if is_array(participants):
+        return _collective_cost_array(col_type, data_volume, participants,
+                                      noc)
     P = int(participants)
     if P <= 1:
         return CollectiveCost(0.0, 0, 0)
@@ -135,6 +144,32 @@ def collective_cost(
         vol = np.where(np.asarray(data_volume) > 0, vol, 0.0)
         return CollectiveCost(vol, int(hops), steps)
     return CollectiveCost(float(vol), int(hops), steps)
+
+
+def _collective_cost_array(col_type: str, data_volume, participants,
+                           noc: NoCParams) -> CollectiveCost:
+    """Batched participants: evaluate the scalar-P formulas once per unique
+    participant count and mask-select the results.  Participant axes come
+    from small spatial-fanout candidate sets (a handful of unique values),
+    so this is a short loop over exact re-executions of the scalar path —
+    results are bit-identical elementwise."""
+    P = np.asarray(participants)
+    dv = np.asarray(data_volume, dtype=np.float64)
+    shape = np.broadcast_shapes(P.shape, dv.shape)
+    vol = np.zeros(shape)
+    hops = np.zeros(shape, dtype=np.int64)
+    steps = np.zeros(shape, dtype=np.int64)
+    for p in np.unique(P):
+        p = int(p)
+        if p <= 1:
+            continue        # zero-cost, matching the scalar short-circuit
+        cp = collective_cost(col_type, data_volume, p, noc)
+        sel = P == p
+        vol = np.where(sel, cp.volume_bytes, vol)
+        hops = np.where(sel, cp.hops, hops)
+        steps = np.where(sel, cp.steps, steps)
+    vol = np.where(dv > 0, vol, 0.0)
+    return CollectiveCost(vol, hops, steps)
 
 
 def _mesh_avg_distance(noc: NoCParams) -> float:

@@ -38,7 +38,7 @@ from typing import Dict, List, Optional, Tuple
 from .collectives import collective_cost, noc_latency
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
-from .numerics import ceil_div, reduce_max, vmax
+from .numerics import ceil_div, is_array, reduce_max, vmax, vwhere
 from .workload import TensorSpec
 
 __all__ = ["NodeCost", "CostModel", "systolic_gemm_cycles"]
@@ -189,17 +189,30 @@ class CostModel:
                                    energy_scale=n_iter * fr * fanout))
 
         # Eq. 5: per-iteration memory window from children (amortized by
-        # each child's execution fraction).
+        # each child's execution fraction).  ``node.schedule`` is either a
+        # name (scalar path) or a boolean mask array (batched path, True =
+        # pipelined) — the mask folds the schedule axis into one SoA pass.
+        sched = node.schedule
+        sched_is_mask = is_array(sched)
         if not child_costs:
             mw = 0.0
-        elif node.schedule == "sequential" or len(child_costs) == 1:
+        elif len(child_costs) == 1:
+            # single child: pipelined degenerates to sequential (stall <= 0)
+            mw = child_costs[0].latency * fracs[0]
+        elif not sched_is_mask and sched == "sequential":
             mw = sum(cc.latency * fr for cc, fr in zip(child_costs, fracs))
         else:
             mx = reduce_max(cc.latency * fr for cc, fr in zip(child_costs, fracs))
             conflict = (sum(cc.mem_lat * fr for cc, fr in zip(child_costs, fracs))
                         - mx)                                       # Eq. 7
             stall = vmax(0.0, conflict)                             # Eq. 6
-            mw = mx + stall
+            pipe = mx + stall
+            if sched_is_mask:
+                seq = sum(cc.latency * fr for cc, fr in zip(child_costs, fracs))
+                mw = vwhere(sched, pipe, seq)
+                stall = vwhere(sched, stall, 0.0)
+            else:
+                mw = pipe
             if self.track_breakdown:
                 c.lat_breakdown["os"] += stall * n_iter
 

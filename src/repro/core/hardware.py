@@ -156,6 +156,19 @@ class Arch:
         i = order.index(level)
         return order[i - 1] if i > 0 else None
 
+    def signature(self) -> Tuple:
+        """Hashable identity covering *every* architecture parameter.
+
+        Evaluation caches must key on this, never on ``name`` alone: two
+        Arch instances sharing a name but differing in bandwidth/capacity
+        are different machines and must not reuse each other's results.
+        Enumerated via ``dataclasses.fields`` so fields added later are
+        covered automatically; all members are frozen dataclasses / tuples,
+        so the tuple is hashable and equality tracks parameter equality.
+        """
+        import dataclasses
+        return tuple(getattr(self, f.name) for f in dataclasses.fields(self))
+
     def spatial_fanout(self, level: str) -> int:
         """Number of peer instances of ``level`` under one parent instance."""
         if level == "DRAM":

@@ -24,10 +24,12 @@ import math
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .cost import CostModel, NodeCost
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Loop, Node, TileNode, Tiling
-from .numerics import ceil_div, vmax, vmin
+from .numerics import ceil_div, is_array, vmax, vmin
 from .validate import validate_tree
 from .workload import CompoundOp, Operation, TensorSpec
 
@@ -40,14 +42,22 @@ VARIANTS_ATTN = ("ua", "pfa", "fa")
 @dataclass(frozen=True)
 class MappingSpec:
     """A concrete mapping instance (tiling + order + spatial + collectives
-    + schedule) — the output of the mapping-instance generator."""
+    + schedule) — the output of the mapping-instance generator.
+
+    ``sp_cluster``/``sp_core`` are the spatial unrolling *fanouts* (how
+    many clusters / cores-per-cluster the builder's partition dim spreads
+    over); 0 means "use the full architecture fanout" (the §V-C2 case
+    study choice and the pre-existing default).  The builders accept NumPy
+    int arrays here — the batched engine enumerates both axes inside its
+    structure-of-arrays grid.
+    """
 
     variant: str = "fused_dist"
     m_tiles: int = 1            # temporal M tiling at GB (DRAM->GB streaming)
     k_tiles: int = 1            # temporal K tiling at OB (accumulation)
     n_tiles: int = 1            # temporal N tiling at GB (KV streaming for FA)
-    sp_cluster: str = "N"       # dim spatially unrolled across clusters
-    sp_core: str = "N"          # dim spatially unrolled across cores
+    sp_cluster: int = 0         # spatial fanout across clusters (0 = arch max)
+    sp_core: int = 0            # spatial fanout across cores (0 = arch max)
     loop_order_gb: Tuple[str, ...] = ("M", "N")
     schedule: str = "sequential"
     collective_gran: str = "tile"   # 'tile' (paper-faithful) | 'stats'
@@ -83,6 +93,17 @@ def _clamped_spatial(size: int, want: int) -> int:
     return vmax(1, vmin(want, size))
 
 
+def _sp_want(req, cap: int):
+    """Resolve a MappingSpec spatial-fanout request against the arch limit:
+    0 (or negative) means 'use the full fanout'; otherwise clamp to the
+    number of physical instances.  Array-polymorphic for the batched grid."""
+    if is_array(req):
+        return np.where(req <= 0, cap, np.minimum(req, cap))
+    if req <= 0:
+        return cap
+    return min(req, cap)
+
+
 def _leaf_shape(tiling: Tiling, dims: Tuple[str, ...]) -> Dict[str, int]:
     return {d: tiling.leaf_tile(d) for d in dims}
 
@@ -106,11 +127,16 @@ def _build_gemm_epilogue(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple
     """GEMM-Softmax / GEMM-LayerNorm trees for all four fusion variants.
 
     Case-study mapping (§V-C2): N spatially across clusters and cores,
-    M temporally tiled (FLAT row granularity).
+    M temporally tiled (FLAT row granularity).  The cluster/core fanouts
+    come from ``spec.sp_cluster``/``spec.sp_core`` (0 = full fanout) and
+    may be arrays on the batched path; edge tiles at non-divisible sizes
+    use ceil-div residual shapes throughout.
     """
     M, N, K = (co.dim_sizes[d] for d in ("M", "N", "K"))
-    n_cl = _clamped_spatial(N, arch.num_clusters)
-    n_co = _clamped_spatial(_ceil_div(N, n_cl), arch.cores_per_cluster)
+    want_cl = _sp_want(spec.sp_cluster, arch.num_clusters)
+    want_co = _sp_want(spec.sp_core, arch.cores_per_cluster)
+    n_cl = _clamped_spatial(N, want_cl)
+    n_co = _clamped_spatial(_ceil_div(N, n_cl), want_co)
     m_tiles = vmin(spec.m_tiles, M)
     k_tiles = vmin(spec.k_tiles, K)
 
@@ -256,8 +282,8 @@ def _build_gemm_epilogue(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple
             input_tensors=gemm_only_inputs, output_tensors=(inter,),
             children=[gemm_ob], schedule="sequential", label="T_gemm_gb")
         root_children.append(gb_gemm)
-        m_cl = _clamped_spatial(M, arch.num_clusters)
-        m_co = _clamped_spatial(_ceil_div(M, m_cl), arch.cores_per_cluster)
+        m_cl = _clamped_spatial(M, want_cl)
+        m_co = _clamped_spatial(_ceil_div(M, m_cl), want_co)
         m_leaf_u = _ceil_div(M, m_cl * m_co * m_tiles)
         for i, op in enumerate(simd_ops):
             shape = {d: (m_leaf_u if d == "M" else co.dim_sizes[d])
@@ -302,17 +328,22 @@ def _build_attention(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[Til
     dtype_b = co.tensors["S"].dtype_bytes
     row_parallel = M >= total_cores        # enough query rows to go around
 
+    want_cl = _sp_want(spec.sp_cluster, arch.num_clusters)
+    want_co = _sp_want(spec.sp_core, arch.cores_per_cluster)
     if row_parallel:
-        sp_gb, sp_ob, sp_dim = (_clamped_spatial(M, arch.num_clusters),
-                                _clamped_spatial(_ceil_div(M, arch.num_clusters),
-                                                 arch.cores_per_cluster), "M")
+        sp_dim = "M"
+        sp_gb = _clamped_spatial(M, want_cl)
+        sp_ob = _clamped_spatial(_ceil_div(M, sp_gb), want_co)
     else:
-        sp_gb, sp_ob, sp_dim = (_clamped_spatial(N, arch.num_clusters),
-                                _clamped_spatial(_ceil_div(N, arch.num_clusters),
-                                                 arch.cores_per_cluster), "N")
+        sp_dim = "N"
+        sp_gb = _clamped_spatial(N, want_cl)
+        sp_ob = _clamped_spatial(_ceil_div(N, sp_gb), want_co)
 
     m_tiles = vmin(spec.m_tiles, M)
-    n_tiles = vmin(spec.n_tiles, max(1, N // (sp_gb * sp_ob if sp_dim == "N" else 1)))
+    # KV-block cap: number of N elements per core, ceil-div so residual
+    # (edge) tiles at non-divisible sizes still count as a streamable block.
+    n_cap = vmax(1, _ceil_div(N, sp_gb * sp_ob)) if sp_dim == "N" else N
+    n_tiles = vmin(spec.n_tiles, n_cap)
     # KV streaming (the N temporal loop) lives at the GB node: blocks of
     # K^T/V are staged DRAM->GB per iteration (FLAT/FlashAttention style).
     gb_loops = ([Loop("M", m_tiles), Loop("N", n_tiles)]
@@ -347,9 +378,12 @@ def _build_attention(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[Til
         inner = ob_node(body, ("Q", "Kt", "V"), (co.external_outputs[0],),
                         label="T_fa_ob")
         children: List[Node] = [inner]
-        if not row_parallel and sp_gb > 1:
+        if not row_parallel:
             # flash-decoding final merge: AR of O tile + running stats,
-            # once per M tile (i.e. per 1/n_tiles of the GB iterations)
+            # once per M tile (i.e. per 1/n_tiles of the GB iterations).
+            # participants == 1 grid points cost exactly zero (the
+            # collective model short-circuits), so the node is added
+            # unconditionally — sp_gb may be an array on the batched path.
             merge_dv = (leaf["M"] * L + 2 * leaf["M"]) * dtype_b
             children.append(CollectiveNode(
                 col_type="AllReduce", tensor="O", reduce_op="add",
@@ -395,7 +429,8 @@ def _build_attention(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[Til
             soft_ob = ob_node(soft_nodes, ("S",), ("P",), label="T_sm_ob")
             soft_ob.exec_fraction = 1.0 / n_tiles   # once per M tile
             children = [score_ob, soft_ob]
-            if not row_parallel and sp_gb > 1:
+            if not row_parallel:
+                # zero-cost when sp_gb == 1; see the fa merge note above
                 children.insert(1, CollectiveNode(
                     col_type="AllReduce", tensor="S", reduce_op="max",
                     src=("GB",), dest=("GB",), participants=sp_gb,
@@ -443,9 +478,12 @@ def _build_generic(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[TileN
             if d not in op.reduce_dims:
                 cnt[d] += 1
     part_dim = max(cnt, key=lambda d: (cnt[d], dims[d]))
-    p_cl = _clamped_spatial(dims[part_dim], arch.num_clusters)
-    p_co = _clamped_spatial(_ceil_div(dims[part_dim], p_cl), arch.cores_per_cluster)
-    m_tiles = vmin(spec.m_tiles, max(1, dims[part_dim] // (p_cl * p_co)) or 1)
+    p_cl = _clamped_spatial(dims[part_dim],
+                            _sp_want(spec.sp_cluster, arch.num_clusters))
+    p_co = _clamped_spatial(_ceil_div(dims[part_dim], p_cl),
+                            _sp_want(spec.sp_core, arch.cores_per_cluster))
+    # ceil-div so the residual edge tile still counts as a temporal step
+    m_tiles = vmin(spec.m_tiles, _ceil_div(dims[part_dim], p_cl * p_co))
     tiling = Tiling(dims,
                     temporal={"GB": {part_dim: m_tiles}},
                     spatial={"GB": {part_dim: p_cl}, "OB": {part_dim: p_co}})
@@ -470,7 +508,8 @@ def _build_generic(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[TileN
                         label=f"T_{op.name}_gb")
         children.append(gb_n)
         # reduction over a spatially-partitioned dim needs an AR
-        if any(d == part_dim for d in op.reduce_dims) and p_cl > 1:
+        # (zero-cost at grid points where p_cl == 1)
+        if any(d == part_dim for d in op.reduce_dims):
             out_b = co.tensors[op.output].size_bytes(dims)
             children.append(CollectiveNode(
                 col_type="AllReduce", tensor=op.output, reduce_op="add",

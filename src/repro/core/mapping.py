@@ -222,7 +222,10 @@ class TileNode:
     exec_fraction: float = 1.0
 
     def __post_init__(self) -> None:
-        if self.schedule not in SCHEDULES:
+        # Batched evaluation passes a boolean mask array (True = pipelined)
+        # spanning a grid of schedule choices; names are validated only on
+        # the scalar path.
+        if not is_array(self.schedule) and self.schedule not in SCHEDULES:
             raise ValueError(f"bad schedule {self.schedule}")
 
     @property

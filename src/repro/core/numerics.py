@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["ceil_div", "vmax", "vmin", "is_array", "reduce_max"]
+__all__ = ["ceil_div", "vmax", "vmin", "vwhere", "is_array", "reduce_max"]
 
 
 def is_array(x) -> bool:
@@ -43,6 +43,14 @@ def vmin(a, b):
     if is_array(a) or is_array(b):
         return np.minimum(a, b)
     return a if a <= b else b
+
+
+def vwhere(mask, a, b):
+    """Elementwise mask-select that preserves Python scalars on the scalar
+    path (used by the Eq. 5-7 schedule select in the batched engine)."""
+    if is_array(mask) or is_array(a) or is_array(b):
+        return np.where(mask, a, b)
+    return a if mask else b
 
 
 def reduce_max(values):

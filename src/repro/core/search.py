@@ -2,15 +2,21 @@
 
 The 4-D design space of Fig. 1 — tiling factors x loop order/spatial
 unrolling x collective strategy x scheduling — factors into a handful of
-discrete *topologies* and a numeric tiling grid per topology (see
-:mod:`.batcheval`).  For the paper's compound ops the whole enumerable
-space is a few thousand points, so ``search()`` is **exhaustive by
-default**: every topology's grid is evaluated in one vectorized pass and
-the global optimum is returned.  When the grid exceeds
-``exhaustive_limit`` (custom candidate sets, huge dims) it falls back to
-the paper's randomized + hill-climb sampling (budget up to 10,000
-iterations, deterministic under ``seed``), now served through a shared
-LRU evaluation cache.
+discrete *topologies* and a dense grid per topology (see
+:mod:`.batcheval`): temporal tiling counts, the ``sp_cluster``/``sp_core``
+spatial unrolling fanouts and the schedule mask are all grid axes.  For
+the paper's compound ops the whole enumerable space is a few thousand
+points, so ``search()`` is **exhaustive by default**: every topology's
+grid is evaluated in one vectorized pass and the global optimum is
+returned.  When the grid exceeds ``exhaustive_limit`` (custom candidate
+sets, huge dims) it falls back to the paper's randomized + hill-climb
+sampling (budget up to 10,000 iterations, deterministic under ``seed``),
+now served through a shared LRU evaluation cache.
+
+``objective='pareto'`` returns the latency/energy Pareto front instead of
+a single scalar winner: ``SearchResult.front`` holds the non-dominated
+(latency, energy_pj, spec) points in ascending-latency order and
+``SearchResult.best`` is the front's minimum-latency mapping.
 
 ``search_many()`` fans independent (workload, arch, kwargs) search cells
 out over a ``concurrent.futures`` pool — the sweep driver used by the
@@ -21,12 +27,14 @@ from __future__ import annotations
 import math
 import os
 import random
-from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+import warnings
+from concurrent.futures import (BrokenExecutor, ProcessPoolExecutor,
+                                ThreadPoolExecutor)
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .batcheval import (enumerate_topologies, evaluate_cached,
-                        evaluate_topology_grid, grid_size)
+from .batcheval import (OBJECTIVES, enumerate_topologies, evaluate_cached,
+                        evaluate_topology_grid, grid_size, pareto_merge)
 from .hardware import Arch
 from .ir import MappingResult, MappingSpec, evaluate_mapping
 from .workload import CompoundOp
@@ -46,6 +54,9 @@ class SearchResult:
     valid: int
     history: List[Tuple[int, float]] = field(default_factory=list)  # (iter, best latency)
     mode: str = "randomized"    # 'exhaustive' | 'randomized'
+    # objective='pareto': non-dominated (latency, energy_pj, spec) points,
+    # ascending latency.  None for scalar objectives.
+    front: Optional[List[Tuple[float, float, MappingSpec]]] = None
 
     @property
     def latency(self) -> float:
@@ -89,6 +100,11 @@ def candidate_specs(co: CompoundOp, arch: Arch, *,
         "m_tiles": pow2_tilings(M),
         "k_tiles": pow2_tilings(K, cap=64),
         "n_tiles": pow2_tilings(N, cap=256),
+        # Spatial unrolling fanouts (Fig. 1 axis 2): powers of two up to
+        # the physical instance counts; free grid axes of the batched
+        # engine, no longer frozen to the §V-C2 full-fanout choice.
+        "sp_cluster": pow2_tilings(arch.num_clusters),
+        "sp_core": pow2_tilings(arch.cores_per_cluster),
         "schedule": ["sequential", "pipelined"],
         "collective_gran": grans,
         "loop_order_gb": [("M", "N"), ("N", "M")],
@@ -101,6 +117,8 @@ def _sample(rng: random.Random, cands: Dict[str, List]) -> MappingSpec:
         m_tiles=rng.choice(cands["m_tiles"]),
         k_tiles=rng.choice(cands["k_tiles"]),
         n_tiles=rng.choice(cands["n_tiles"]),
+        sp_cluster=rng.choice(cands["sp_cluster"]),
+        sp_core=rng.choice(cands["sp_core"]),
         schedule=rng.choice(cands["schedule"]),
         collective_gran=rng.choice(cands["collective_gran"]),
         loop_order_gb=rng.choice(cands["loop_order_gb"]),
@@ -135,8 +153,9 @@ def search(co: CompoundOp, arch: Arch, *,
            hillclimb_frac: float = 0.5,
            mode: str = "auto",
            exhaustive_limit: int = EXHAUSTIVE_LIMIT) -> SearchResult:
-    """Map-space search.  ``objective`` is 'latency', 'energy' or 'edp'
-    (energy-delay product).
+    """Map-space search.  ``objective`` is 'latency', 'energy', 'edp'
+    (energy-delay product) or 'pareto' (latency/energy front; see
+    ``SearchResult.front``).
 
     ``mode``: 'exhaustive' evaluates the whole enumerable space through
     the batched engine; 'randomized' is the paper's sampling + hill-climb;
@@ -144,6 +163,8 @@ def search(co: CompoundOp, arch: Arch, *,
     ``exhaustive_limit`` points — which is both faster and provably
     no-worse than any sampled subset of the same space.
     """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}")
     cands = candidate_specs(co, arch, variants=variants,
                             allow_stats_gran=allow_stats_gran)
     if mode == "auto":
@@ -161,15 +182,23 @@ def search(co: CompoundOp, arch: Arch, *,
 
 def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
                        objective: str) -> SearchResult:
+    pareto = objective == "pareto"
     best_spec: Optional[MappingSpec] = None
     best_score = math.inf
     best_latency = math.inf
     evaluated = valid = 0
     history: List[Tuple[int, float]] = []
+    front_pts: List[Tuple[float, float, MappingSpec]] = []
     for topo in enumerate_topologies(co, cands):
         br = evaluate_topology_grid(co, arch, topo, cands)
         evaluated += br.size
         valid += int(br.valid.sum())
+        if pareto:
+            # per-topology vectorized skyline; merged globally below
+            front_pts.extend(
+                (float(br.latency[i]), float(br.energy_pj[i]), br.spec_at(i))
+                for i in br.pareto_front())
+            continue
         i = br.best_index(objective)
         if i is None:
             continue
@@ -179,21 +208,32 @@ def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
             best_spec = br.spec_at(i)
             best_latency = float(br.latency[i])
             history.append((evaluated, best_latency))
+    front: Optional[List[Tuple[float, float, MappingSpec]]] = None
+    if pareto:
+        front = pareto_merge(front_pts)
+        if front:
+            best_latency, _, best_spec = front[0]
+            history.append((evaluated, best_latency))
     if best_spec is None:
         raise RuntimeError(f"no valid mapping found for {co.name} on {arch.name}")
     best = evaluate_mapping(co, arch, best_spec)
     return SearchResult(best=best, evaluated=evaluated, valid=valid,
-                        history=history, mode="exhaustive")
+                        history=history, mode="exhaustive", front=front)
 
 
 def _search_randomized(co: CompoundOp, arch: Arch, cands: Dict[str, List], *,
                        budget: int, seed: int, objective: str,
                        hillclimb_frac: float) -> SearchResult:
+    pareto = objective == "pareto"
+    # Pareto mode archives every valid sample and extracts the front at
+    # the end; latency steers the hill-climb.
+    scalar_objective = "latency" if pareto else objective
     rng = random.Random(seed)
     best_spec: Optional[MappingSpec] = None
     best_score = math.inf
     evaluated = valid = 0
     history: List[Tuple[int, float]] = []
+    archive: List[Tuple[float, float, MappingSpec]] = []
     seen = set()
 
     explore = max(1, int(budget * (1.0 - hillclimb_frac)))
@@ -212,7 +252,9 @@ def _search_randomized(co: CompoundOp, arch: Arch, cands: Dict[str, List], *,
         evaluated += 1
         if is_valid:
             valid += 1
-        s = _score_of(latency, energy_pj, is_valid, objective)
+            if pareto:
+                archive.append((latency, energy_pj, spec))
+        s = _score_of(latency, energy_pj, is_valid, scalar_objective)
         if s < best_score:
             best_spec, best_score = spec, s
             history.append((i, latency))
@@ -221,7 +263,8 @@ def _search_randomized(co: CompoundOp, arch: Arch, cands: Dict[str, List], *,
         raise RuntimeError(f"no valid mapping found for {co.name} on {arch.name}")
     best = evaluate_mapping(co, arch, best_spec)
     return SearchResult(best=best, evaluated=evaluated, valid=valid,
-                        history=history, mode="randomized")
+                        history=history, mode="randomized",
+                        front=pareto_merge(archive) if pareto else None)
 
 
 # ------------------------------------------------------------ sweep driver
@@ -252,7 +295,12 @@ def parallel_map(fn: Callable, items: Sequence, *,
     evaluation caches and NumPy releases the GIL in the hot loops),
     'process' (bypasses the GIL; items/results must pickle), or 'serial'.
     Falls back to serial execution when a pool cannot be created (e.g.
-    sandboxed environments without working multiprocessing primitives).
+    sandboxed environments without working multiprocessing primitives),
+    and — for the items not yet completed — when the pool *breaks*
+    mid-sweep (a worker killed by the OOM killer or a signal raises
+    ``BrokenProcessPool`` out of ``pool.map``); a RuntimeWarning is
+    emitted so the degradation is visible.  Ordinary exceptions raised by
+    ``fn`` itself always propagate.
     """
     items = list(items)
     if executor == "serial" or len(items) <= 1:
@@ -264,12 +312,28 @@ def parallel_map(fn: Callable, items: Sequence, *,
         # Pool creation failed (e.g. sandbox without multiprocessing
         # primitives) — errors raised by fn itself still propagate below.
         return [fn(it) for it in items]
-    with pool:
-        if executor == "process":
-            # Amortize per-item pickling for short tasks.
-            chunk = max(1, len(items) // (32 * (max_workers or os.cpu_count() or 4)))
-            return list(pool.map(fn, items, chunksize=chunk))
-        return list(pool.map(fn, items))
+    results: List = []
+    try:
+        with pool:
+            if executor == "process":
+                # Amortize per-item pickling for short tasks.
+                chunk = max(1, len(items)
+                            // (32 * (max_workers or os.cpu_count() or 4)))
+                it = pool.map(fn, items, chunksize=chunk)
+            else:
+                it = pool.map(fn, items)
+            for r in it:
+                results.append(r)
+    except BrokenExecutor as e:
+        # A worker died mid-sweep (e.g. OOM-killed): salvage the completed
+        # prefix and finish the remaining items serially instead of losing
+        # the whole sweep.
+        warnings.warn(
+            f"parallel_map: worker pool broke after {len(results)}/"
+            f"{len(items)} items ({e!r}); finishing remaining items "
+            "serially", RuntimeWarning, stacklevel=2)
+        results.extend(fn(it) for it in items[len(results):])
+    return results
 
 
 def search_many(jobs: Sequence, *,

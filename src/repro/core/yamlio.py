@@ -13,12 +13,14 @@ mapping:                                     # optional -> search if absent
   m_tiles: 8
   k_tiles: 2
   n_tiles: 1
+  sp_cluster: 0                              # spatial fanout, 0 = arch max
+  sp_core: 0
   schedule: sequential
   collective_gran: tile
 constraints:
   budget: 2000
   seed: 0
-  objective: latency
+  objective: latency                         # latency | energy | edp | pareto
   variants: [fused_dist, fused_std]
 """
 from __future__ import annotations

@@ -57,6 +57,21 @@ def _best_candidate(br) -> int:
     return min(range(br.size), key=lambda j: float(br.latency[j]))
 
 
+SCHEDULES = ("sequential", "pipelined")
+
+
+def _with_schedules(axis):
+    """Duplicate a candidate axis across the schedule grid axis: the
+    batched engine evaluates both Eq. 5-7 schedules per block candidate in
+    the same SoA pass (Pallas pipelines its grid, so the pipelined window
+    is usually the realistic one, but the cost model decides)."""
+    return [v for _ in SCHEDULES for v in axis]
+
+
+def _schedule_axis(n: int):
+    return [s for s in SCHEDULES for _ in range(n)]
+
+
 @functools.lru_cache(maxsize=256)
 def attention_blocks(sq: int, skv: int, d: int) -> Tuple[int, int]:
     """(block_q, block_k) for the FlashAttention kernel via the batched
@@ -83,13 +98,14 @@ def attention_blocks(sq: int, skv: int, d: int) -> Tuple[int, int]:
         return (_LANE, _LANE)
     M, N = max(sq, _LANE), max(skv, _LANE)
     co = flash_attention(M, d, N, d)
-    topo = Topology(variant="fa", schedule="sequential")
+    topo = Topology(variant="fa")
     br = evaluate_specs_batch(
         co, arch, topo,
-        [math.ceil(M / bq) for bq, _ in pairs],
-        [1] * len(pairs),
-        [math.ceil(N / bk) for _, bk in pairs])
-    return pairs[_best_candidate(br)]
+        _with_schedules([math.ceil(M / bq) for bq, _ in pairs]),
+        [1] * (len(SCHEDULES) * len(pairs)),
+        _with_schedules([math.ceil(N / bk) for _, bk in pairs]),
+        schedule=_schedule_axis(len(pairs)))
+    return pairs[_best_candidate(br) % len(pairs)]
 
 
 @functools.lru_cache(maxsize=256)
@@ -113,13 +129,14 @@ def gemm_epilogue_blocks(m: int, n: int, k: int) -> Tuple[int, int]:
         return (_LANE, _LANE)
     M, K = max(m, _LANE), max(k, _LANE)
     co = gemm_softmax(M, n, K)
-    topo = Topology(variant="fused_dist", schedule="sequential")
+    topo = Topology(variant="fused_dist")
     br = evaluate_specs_batch(
         co, arch, topo,
-        [math.ceil(M / bm) for bm, _ in pairs],
-        [math.ceil(K / bk) for _, bk in pairs],
-        [1] * len(pairs))
-    return pairs[_best_candidate(br)]
+        _with_schedules([math.ceil(M / bm) for bm, _ in pairs]),
+        _with_schedules([math.ceil(K / bk) for _, bk in pairs]),
+        [1] * (len(SCHEDULES) * len(pairs)),
+        schedule=_schedule_axis(len(pairs)))
+    return pairs[_best_candidate(br) % len(pairs)]
 
 
 @functools.lru_cache(maxsize=256)

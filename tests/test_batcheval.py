@@ -1,8 +1,10 @@
 """Tests for the vectorized batch map-space evaluation engine
 (core/batcheval.py), the exhaustive search mode, the shared evaluation
 caches and the parallel sweep driver."""
+import dataclasses
 import math
 import random
+import warnings
 
 import numpy as np
 import pytest
@@ -11,11 +13,11 @@ from repro.core import batcheval
 from repro.core.batcheval import (Topology, co_signature,
                                   enumerate_topologies, evaluate_cached,
                                   evaluate_specs_batch,
-                                  evaluate_topology_grid)
+                                  evaluate_topology_grid, pareto_merge)
 from repro.core.hardware import cloud, edge
 from repro.core.ir import MappingSpec, evaluate_mapping
-from repro.core.search import (candidate_specs, search, search_many,
-                               _sample)
+from repro.core.search import (candidate_specs, parallel_map, search,
+                               search_many, _sample)
 from repro.core.workload import (attention, flash_attention, gemm_layernorm,
                                  gemm_softmax, ssd_chunk)
 
@@ -25,6 +27,14 @@ WORKLOADS = [
     ("attention_prefill", attention(1024, 256, 1024, 256)),
     ("attention_decode", attention(1, 128, 1024, 128)),
     ("flash_attention", flash_attention(2048, 256, 2048, 256)),
+]
+# Prime / non-divisible sizes: spatial fanouts never divide the dims, so
+# every edge tile is a ceil-div residual (regression cover for the
+# non-divisible fanout accounting fix).
+PRIME_WORKLOADS = [
+    ("gemm_softmax_prime", gemm_softmax(509, 769, 127)),
+    ("attention_decode_prime", attention(1, 64, 769, 128)),
+    ("attention_prefill_prime", attention(769, 127, 769, 127)),
 ]
 ARCHS = [edge(), cloud()]
 
@@ -55,6 +65,98 @@ def test_batch_matches_tree_path(wl_name, co, arch):
             assert bool(br.valid[i]) == r.valid
             assert br.latency[i] == pytest.approx(r.latency, rel=1e-9)
             assert br.energy_pj[i] == pytest.approx(r.energy_pj, rel=1e-9)
+
+
+@pytest.mark.parametrize("wl_name,co", PRIME_WORKLOADS,
+                         ids=[n for n, _ in PRIME_WORKLOADS])
+@pytest.mark.parametrize("arch", ARCHS, ids=[a.name for a in ARCHS])
+def test_batch_matches_tree_path_prime_sizes(wl_name, co, arch):
+    """Parity at prime dimension sizes: no spatial fanout divides the
+    dims, so every tile is a ceil-div residual (edge) tile — the batched
+    path must still match the per-spec tree path everywhere."""
+    cands = candidate_specs(co, arch)
+    rng = random.Random(1)
+    for topo in enumerate_topologies(co, cands):
+        br = evaluate_topology_grid(co, arch, topo, cands)
+        idxs = {rng.randrange(br.size) for _ in range(8)} | {0, br.size - 1}
+        for i in idxs:
+            spec = br.spec_at(i)
+            try:
+                r = evaluate_mapping(co, arch, spec)
+            except (ValueError, KeyError):
+                assert not br.valid[i]
+                continue
+            assert bool(br.valid[i]) == r.valid
+            assert br.latency[i] == pytest.approx(r.latency, rel=1e-9)
+            assert br.energy_pj[i] == pytest.approx(r.energy_pj, rel=1e-9)
+
+
+def test_spatial_and_schedule_axes_in_grid():
+    """The SoA grid enumerates sp_cluster/sp_core and the schedule; the
+    topology count no longer doubles on the schedule axis."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    cands = candidate_specs(co, arch)
+    topos = enumerate_topologies(co, cands)
+    # schedule folded into the grid: topologies = variants only (x gran)
+    assert len(topos) == len(cands["variant"])
+    assert all(t.schedule == "sequential" for t in topos)
+    expect = (len(cands["m_tiles"]) * len(cands["k_tiles"])
+              * len(cands["sp_cluster"]) * len(cands["sp_core"])
+              * len(cands["schedule"]))
+    assert batcheval.grid_size(co, cands) == expect
+    br = evaluate_topology_grid(co, arch, topos[0], cands)
+    assert br.size == expect
+    assert set(np.unique(br.sp_cluster)) == set(cands["sp_cluster"])
+    assert set(np.unique(br.sp_core)) == set(cands["sp_core"])
+    assert set(np.unique(br.schedule)) == set(cands["schedule"])
+    # candidate specs per space grew >= 4x over the m/k-only grid of PR 1
+    legacy = len(cands["m_tiles"]) * len(cands["k_tiles"])
+    assert expect >= 4 * legacy
+    # and the spatial axes actually change results somewhere on the grid
+    v = br.valid
+    full = br.latency[v & (br.sp_cluster == max(cands["sp_cluster"]))]
+    one = br.latency[v & (br.sp_cluster == 1)]
+    assert full.size and one.size and not np.isclose(full.min(), one.min())
+
+
+def test_grid_accepts_pr1_shaped_candidate_dicts():
+    """Candidate dicts without the sp_*/schedule axes (the PR 1 API
+    shape) pin the missing axes instead of raising KeyError."""
+    co = gemm_softmax(256, 1024, 64)
+    arch = edge()
+    cands = {"m_tiles": [1, 2, 4], "k_tiles": [1, 2], "n_tiles": [1]}
+    assert batcheval.grid_size(co, cands) == 6
+    topo = Topology(variant="fused_dist")
+    br = evaluate_topology_grid(co, arch, topo, cands)
+    assert br.size == 6
+    assert set(np.unique(br.sp_cluster)) == {0}          # auto fanout
+    assert set(np.unique(br.schedule)) == {"sequential"}
+    # rejected topology keeps the requested breakdown dicts (zeros)
+    bad = evaluate_specs_batch(co, arch, Topology(variant="fa"),
+                               [1], [1], [1], track_breakdown=True)
+    assert not bad.valid.any()
+    assert bad.lat_breakdown is not None
+    assert bad.lat_breakdown_at(0)["gemm"] == 0.0
+    # unknown schedule names are rejected up front, like the scalar path
+    with pytest.raises(ValueError, match="bad schedule"):
+        evaluate_specs_batch(co, arch, topo, [1], [1], [1],
+                             schedule=["sequentail"])
+
+
+def test_spec_spatial_fanouts_reach_scalar_builder():
+    """sp_cluster/sp_core are honoured by the per-spec tree path too."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    base = MappingSpec(variant="fused_dist", m_tiles=8, k_tiles=2)
+    narrow = dataclasses.replace(base, sp_cluster=1, sp_core=1)
+    r_full = evaluate_mapping(co, arch, base)
+    r_one = evaluate_mapping(co, arch, narrow)
+    assert r_full.latency != r_one.latency
+    # sp 0 (auto) == full arch fanout explicitly requested
+    explicit = dataclasses.replace(base, sp_cluster=arch.num_clusters,
+                                   sp_core=arch.cores_per_cluster)
+    assert evaluate_mapping(co, arch, explicit).latency == r_full.latency
 
 
 def test_batch_specs_parallel_arrays():
@@ -114,6 +216,89 @@ def test_search_objectives():
             <= lat.latency * lat.energy_pj * (1 + 1e-12))
 
 
+def test_pareto_front_matches_bruteforce():
+    """Vectorized skyline == O(n^2) dominance check on a real grid."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    cands = candidate_specs(co, arch)
+    topo = enumerate_topologies(co, cands)[0]
+    br = evaluate_topology_grid(co, arch, topo, cands)
+    front = br.pareto_front()
+    assert front.size > 0
+    lat, en, valid = br.latency, br.energy_pj, br.valid
+    fset = set(front.tolist())
+    kept = [(lat[i], en[i]) for i in front]
+    # ascending latency, strictly descending energy
+    assert all(a[0] <= b[0] and a[1] > b[1] for a, b in zip(kept, kept[1:]))
+    for i in front:
+        assert valid[i]
+        dominated = ((lat <= lat[i]) & (en <= en[i]) & valid
+                     & ((lat < lat[i]) | (en < en[i])))
+        assert not dominated.any(), f"front point {i} is dominated"
+    # every non-front valid point is dominated by (or duplicates) the front
+    for j in np.flatnonzero(valid):
+        if j in fset:
+            continue
+        dom = ((lat <= lat[j]) & (en <= en[j]) & valid
+               & (np.arange(br.size) != j))
+        assert dom.any(), f"non-front point {j} is non-dominated"
+
+
+def test_pareto_merge_skyline():
+    pts = [(2.0, 5.0, "a"), (1.0, 9.0, "b"), (3.0, 1.0, "c"),
+           (2.5, 5.0, "d"), (1.0, 9.0, "e"), (2.0, 4.0, "f")]
+    out = pareto_merge(pts)
+    assert [p[2] for p in out] == ["b", "f", "c"]
+
+
+def test_search_pareto_objective():
+    """objective='pareto': front endpoints match the scalar optima and
+    SearchResult.best is the front's minimum-latency mapping."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    lat = search(co, arch, objective="latency")
+    en = search(co, arch, objective="energy")
+    pf = search(co, arch, objective="pareto")
+    assert pf.mode == "exhaustive" and pf.front
+    assert pf.front[0][0] == pytest.approx(lat.latency, rel=1e-12)
+    assert pf.front[-1][1] == pytest.approx(en.energy_pj, rel=1e-12)
+    assert pf.latency == pytest.approx(pf.front[0][0], rel=1e-12)
+    assert pf.best.valid
+    # scalar objectives keep front=None; randomized mode fills it too
+    assert lat.front is None
+    rd = search(co, arch, mode="randomized", budget=300, seed=0,
+                objective="pareto")
+    assert rd.front and all(a[0] < b[0] and a[1] > b[1]
+                            for a, b in zip(rd.front, rd.front[1:]))
+
+
+def test_batched_breakdown_matches_scalar_walk():
+    """track_breakdown=True carries per-key latency/energy breakdowns
+    through the SoA pass, matching the scalar tree walk per grid point."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    topo = Topology(variant="fused_dist")
+    br = evaluate_specs_batch(
+        co, arch, topo, [8, 4, 8], [2, 2, 1], [1, 1, 1],
+        sp_cluster=[4, 2, 1], sp_core=[4, 1, 2],
+        schedule=["sequential", "pipelined", "pipelined"],
+        track_breakdown=True)
+    assert br.lat_breakdown is not None
+    for i in range(br.size):
+        r = evaluate_mapping(co, arch, br.spec_at(i))
+        bd = br.lat_breakdown_at(i)
+        eb = br.energy_breakdown_at(i)
+        for k, v in r.cost.lat_breakdown.items():
+            assert bd[k] == pytest.approx(v, rel=1e-9, abs=1e-18)
+        for k, v in r.cost.energy_breakdown.items():
+            assert eb[k] == pytest.approx(v, rel=1e-9, abs=1e-12)
+    # default path stays lean
+    lean = evaluate_specs_batch(co, arch, topo, [8], [2], [1])
+    assert lean.lat_breakdown is None
+    with pytest.raises(ValueError):
+        lean.lat_breakdown_at(0)
+
+
 def test_exhaustive_falls_back_when_space_too_large():
     co = gemm_softmax(512, 1024, 128)
     arch = edge()
@@ -167,6 +352,37 @@ def test_spec_cache_hits_and_rejections():
     assert evaluate_cached(co, arch, bad) is None
 
 
+def test_arch_signature_busts_caches():
+    """Regression: two Arch instances sharing a name but differing in a
+    parameter (here GB bandwidth) must not reuse each other's cached
+    results — keys use Arch.signature(), not arch.name."""
+    batcheval.cache_clear()
+    co = gemm_softmax(256, 1024, 64)
+    a1 = edge()
+    a2 = dataclasses.replace(
+        a1, gb=dataclasses.replace(a1.gb, bandwidth=a1.gb.bandwidth / 4))
+    assert a1.name == a2.name
+    assert a1.signature() != a2.signature()
+
+    cands = candidate_specs(co, a1)
+    topo = enumerate_topologies(co, cands)[0]
+    br1 = evaluate_topology_grid(co, a1, topo, cands)
+    g = batcheval.cache_info()["grid"]
+    br2 = evaluate_topology_grid(co, a2, topo, cands)
+    g2 = batcheval.cache_info()["grid"]
+    assert g2["misses"] == g["misses"] + 1   # miss, not a stale hit
+    assert br2 is not br1
+    assert float(br1.scores().min()) != float(br2.scores().min())
+
+    spec = MappingSpec(variant="fused_dist", m_tiles=8, k_tiles=2)
+    r1 = evaluate_cached(co, a1, spec)
+    s = batcheval.cache_info()["spec"]
+    r2 = evaluate_cached(co, a2, spec)
+    s2 = batcheval.cache_info()["spec"]
+    assert s2["misses"] == s["misses"] + 1
+    assert r1 != r2
+
+
 def test_co_signature_distinguishes_shapes():
     assert co_signature(gemm_softmax(256, 1024, 64)) != \
         co_signature(gemm_softmax(256, 1024, 128))
@@ -184,6 +400,56 @@ def test_search_many_matches_serial_order():
     assert [r.latency for r in par] == [r.latency for r in ser]
     assert [r.best.spec.variant for r in par] == \
         ["unfused", "fused_epilogue", "fused_std", "fused_dist"]
+
+
+def _square(x):
+    return x * x
+
+
+def _boom(x):
+    if x == 2:
+        raise ValueError("boom")
+    return x
+
+
+def test_parallel_map_propagates_fn_exceptions():
+    """Ordinary exceptions raised by fn are NOT swallowed by the broken-
+    pool fallback — they propagate to the caller."""
+    with pytest.raises(ValueError, match="boom"):
+        parallel_map(_boom, [1, 2, 3], executor="thread")
+    with pytest.raises(ValueError, match="boom"):
+        parallel_map(_boom, [1, 2, 3], executor="serial")
+
+
+def test_parallel_map_broken_pool_falls_back_serial(monkeypatch):
+    """A pool that breaks mid-sweep (worker killed -> BrokenProcessPool
+    out of pool.map) degrades to serial execution of the remaining items
+    with a RuntimeWarning, instead of losing the whole sweep."""
+    from concurrent.futures.process import BrokenProcessPool
+
+    from repro.core import search as search_mod
+
+    class _BreaksAfterOne:
+        def __init__(self, max_workers=None):
+            pass
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            return False
+
+        def map(self, fn, items, chunksize=1):
+            def gen():
+                it = list(items)
+                yield fn(it[0])
+                raise BrokenProcessPool("worker died")
+            return gen()
+
+    monkeypatch.setattr(search_mod, "ProcessPoolExecutor", _BreaksAfterOne)
+    with pytest.warns(RuntimeWarning, match="worker pool broke"):
+        out = parallel_map(_square, [1, 2, 3, 4], executor="process")
+    assert out == [1, 4, 9, 16]
 
 
 # -------------------------------------------------- autotune integration

@@ -1,11 +1,22 @@
 """Multi-device tests: run in a subprocess with 8 virtual CPU devices
-(XLA_FLAGS must be set before jax initializes, hence the subprocess)."""
+(XLA_FLAGS must be set before jax initializes, hence the subprocess).
+
+Triage note: the suite failed at seed because the kernel/model stack it
+exercises could not import against newer pltpu APIs; the PR 1 compat shim
+fixed that and the suite passes under the sandbox now.  Environments that
+cannot run it at all (no jax, or subprocess spawning disabled) skip with
+an explicit reason instead of erroring; genuine assertion failures inside
+the subprocess still fail the test.  CI runs this under the non-blocking
+``slow-suite`` job so regressions stay visible without gating merges.
+"""
 import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+pytest.importorskip("jax", reason="distributed suite needs jax")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -122,7 +133,10 @@ def test_distributed_suite():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=1200)
+    try:
+        r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                           capture_output=True, text=True, timeout=1200)
+    except (OSError, PermissionError) as e:
+        pytest.skip(f"sandbox cannot spawn the 8-device subprocess: {e!r}")
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     assert "ALL_DISTRIBUTED_OK" in r.stdout
