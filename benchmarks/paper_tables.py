@@ -31,6 +31,12 @@ ATTN_CLOUD = [(1024, 512, 1024, 512), (1, 128, 16384, 128),
 
 BUDGET = 250
 
+# Non-pow2 provisioning showcase shapes (M, N, K with 3*2^k factors): the
+# divisor-complete fanout axes add 3/6-way unrollings the pow2 sets never
+# enumerate.  Shared with benchmarks/search_throughput.py (schema-v3
+# provisioning gates).
+PROVISIONING_GEMMS = [(384, 768, 96), (768, 1536, 192)]
+
 
 def _geomean(xs: List[float]) -> float:
     return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
@@ -159,6 +165,41 @@ def pareto_fronts() -> Dict:
     return {"front_sizes": sizes}
 
 
+def provisioning_fronts() -> Dict:
+    """Provisioning study (beyond-scalar objectives, 3-D): the
+    latency/energy/capacity-headroom Pareto front of each gemm_softmax
+    space (``objective='pareto3'``), plus non-pow2 shapes where the
+    divisor-complete fanout axes (sp_cluster=3/6, ...) genuinely widen
+    the space.  For each cell we print the front size, the headroom span
+    and the 'knee' trade: how much latency the max-headroom provisioning
+    point gives up versus the latency-optimal mapping."""
+    cells = [(gemm_softmax(M, N, K), arch)
+             for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud()))
+             for (M, N, K) in shapes]
+    # divisor-complete showcase shapes, on both archs
+    cells += [(gemm_softmax(*shape), arch)
+              for shape in PROVISIONING_GEMMS
+              for arch in (edge(), cloud())]
+    results = iter(search_many([(co, arch, {"objective": "pareto3"})
+                                for co, arch in cells]))
+    sizes, knees = [], []
+    for i, (co, arch) in enumerate(cells):
+        front = next(results).front
+        lat_lo = front[0][0]
+        hr = [p[2] for p in front]
+        roomy = max(front, key=lambda p: p[2])   # max-headroom point
+        knee = roomy[0] / lat_lo                 # latency cost of slack
+        sizes.append(len(front))
+        knees.append(knee)
+        dims = "x".join(str(co.dim_sizes[d]) for d in ("M", "N", "K"))
+        print(f"prov3_{arch.name}_{dims},{lat_lo*1e6:.2f},"
+              f"front3={len(front)};headroom={min(hr):.3f}..{max(hr):.3f};"
+              f"maxroom_lat_cost={knee:.2f}x")
+    print(f"prov3_geomean,0,mean_front_size={sum(sizes)/len(sizes):.1f};"
+          f"geomean_maxroom_lat_cost={_geomean(knees):.2f}x")
+    return {"front_sizes": sizes, "knees": knees}
+
+
 def mapping_variation() -> Dict:
     """Fig 7: latency/energy spread across sampled mappings (GEMM5 edge)."""
     co = gemm_softmax(512, 1024, 128)
@@ -224,12 +265,15 @@ def run_all() -> Dict:
     bd = breakdowns()
     print("# --- latency/energy Pareto fronts ---")
     pf = pareto_fronts()
+    print("# --- provisioning study: 3-D latency/energy/headroom fronts ---")
+    pv = provisioning_fronts()
     print("# --- Fig 7: mapping variation ---")
     mv = mapping_variation()
     print("# --- beyond-paper: stats-granularity collectives ---")
     bp = beyond_paper_stats_collectives()
     return {"gemm_sm": sm, "gemm_ln": ln, "attention": at,
-            "breakdowns": bd, "pareto": pf, "variation": mv, "beyond": bp}
+            "breakdowns": bd, "pareto": pf, "provisioning": pv,
+            "variation": mv, "beyond": bp}
 
 
 if __name__ == "__main__":

@@ -11,17 +11,22 @@ Measures mappings/sec through
 on the paper's gemm_softmax and attention spaces.  Each space is measured
 twice: on the **legacy axes** (spatial fanouts pinned to the arch
 maximum, as in the PR 1 engine — the mappings/sec floor guards against
-regressions there) and on the **full grid** (sp_cluster x sp_core x
-schedule folded into the SoA pass).  It also cross-checks, on every
-(workload, arch) pair of ``paper_tables.py``, that
+regressions there) and on the **full grid** (divisor-complete sp_cluster
+x sp_core x schedule folded into the SoA pass), plus a non-pow2-dims
+space where the divisor fanout axes genuinely widen the grid.  It also
+cross-checks, on every (workload, arch) pair of ``paper_tables.py``, that
 
-* exhaustive search returns latency <= the seed randomized search, and
+* exhaustive search returns latency <= the seed randomized search,
 * the Pareto front's best latency <= the scalar-latency optimum (the
-  front must be superset-quality, never worse than the scalar objective).
+  front must be superset-quality, never worse than the scalar objective),
+* the **divisor-complete** exhaustive optimum <= the pow2-only optimum
+  (superset candidate axes can only improve the best mapping), and
+* the 3-D provisioning front (``objective='pareto3'``) also contains the
+  latency optimum.
 
-Emits ``BENCH_search.json`` (schema documented in benchmarks/README.md)
-and prints ``name,us_per_call,derived`` CSV rows.  Exits non-zero if the
-speedup floor or either invariant is violated.
+Emits ``BENCH_search.json`` (schema comet/search_throughput/v3, see
+benchmarks/README.md) and prints ``name,us_per_call,derived`` CSV rows.
+Exits non-zero if the speedup floor or any invariant is violated.
 """
 from __future__ import annotations
 
@@ -41,6 +46,7 @@ from repro.core.workload import attention, flash_attention, gemm_softmax
 SPEEDUP_FLOOR = 20.0
 TREE_SAMPLE = 300          # specs timed through the per-spec path
 MIN_TREE_SECONDS = 0.25    # keep timing noise down on fast machines
+REL_EPS = 1e-12            # tolerance for the <= latency gates
 
 
 def _tree_throughput(co, arch, cands, repeats: int = 3) -> Dict:
@@ -99,7 +105,8 @@ def _batch_throughput(co, arch, cands, repeats: int = 3) -> Dict:
 def measure_space(name: str, co, arch, axes: str = "full") -> Dict:
     """``axes='legacy'`` pins the spatial fanouts to the arch maximum
     (sp_cluster = sp_core = 0), i.e. the PR 1 space — its mappings/sec is
-    the no-regression reference; ``'full'`` measures the enlarged grid."""
+    the no-regression reference; ``'full'`` measures the enlarged
+    divisor-complete grid."""
     cands = candidate_specs(co, arch)
     if axes == "legacy":
         cands = dict(cands, sp_cluster=[0], sp_core=[0])
@@ -116,13 +123,9 @@ def measure_space(name: str, co, arch, axes: str = "full") -> Dict:
             "batch": batch, "speedup": speedup}
 
 
-def exhaustive_vs_seed_randomized() -> List[Dict]:
-    """Every (workload, arch) pair of paper_tables.py: exhaustive search
-    must return latency <= the seed's randomized search result, and the
-    Pareto front must be superset-quality (its best-latency point <= the
-    scalar-latency optimum — the front always contains the optimum)."""
-    from benchmarks.paper_tables import (ATTN_CLOUD, ATTN_EDGE, BUDGET,
-                                         GEMMS_CLOUD, GEMMS_EDGE)
+def _paper_pairs() -> List:
+    from benchmarks.paper_tables import (ATTN_CLOUD, ATTN_EDGE, GEMMS_CLOUD,
+                                         GEMMS_EDGE)
     from repro.core.workload import gemm_layernorm
 
     rows = []
@@ -134,29 +137,91 @@ def exhaustive_vs_seed_randomized() -> List[Dict]:
         for M, K, N, L in shapes:
             rows.append(("attention", attention(M, K, N, L), arch))
             rows.append(("flash_attention", flash_attention(M, K, N, L), arch))
+    return rows
+
+
+def search_invariants() -> List[Dict]:
+    """Every (workload, arch) pair of paper_tables.py: exhaustive search
+    must return latency <= the seed's randomized search result, the
+    Pareto fronts (2-D and 3-D) must be superset-quality (best-latency
+    point <= the scalar-latency optimum), and the divisor-complete
+    candidate axes must never lose to the pow2-only axes they contain."""
+    from benchmarks.paper_tables import BUDGET
 
     out = []
-    for name, co, arch in rows:
+    for name, co, arch in _paper_pairs():
         ex = search(co, arch, mode="exhaustive")
+        ex_pow2 = search(co, arch, mode="exhaustive", fanouts="pow2")
         rd = search(co, arch, mode="randomized", budget=BUDGET, seed=1)
         pf = search(co, arch, mode="exhaustive", objective="pareto")
+        pf3 = search(co, arch, mode="exhaustive", objective="pareto3")
         out.append({
             "workload": name,
             "dims": dict(co.dim_sizes),
             "arch": arch.name,
             "exhaustive_latency_s": ex.latency,
+            "pow2_latency_s": ex_pow2.latency,
             "randomized_latency_s": rd.latency,
             "pareto_front_size": len(pf.front),
             "pareto_best_latency_s": pf.front[0][0],
-            "ok": (ex.latency <= rd.latency * (1 + 1e-12)
-                   and pf.front[0][0] <= ex.latency * (1 + 1e-12)),
+            "pareto3_front_size": len(pf3.front),
+            "pareto3_best_latency_s": pf3.front[0][0],
+            "pareto3_max_headroom": max(p[2] for p in pf3.front),
+            "ok": (ex.latency <= rd.latency * (1 + REL_EPS)
+                   and ex.latency <= ex_pow2.latency * (1 + REL_EPS)
+                   and pf.front[0][0] <= ex.latency * (1 + REL_EPS)
+                   and pf3.front[0][0] <= ex.latency * (1 + REL_EPS)),
         })
     bad = [r for r in out if not r["ok"]]
-    print(f"exhaustive_vs_randomized,0,pairs={len(out)};regressions={len(bad)}")
+    print(f"search_invariants,0,pairs={len(out)};regressions={len(bad)}")
     return out
 
 
+def provisioning_study() -> Dict:
+    """3-D latency/energy/capacity-headroom fronts on the non-pow2
+    showcase shapes shared with ``paper_tables.PROVISIONING_GEMMS`` (dims
+    with 3*2^k factors, so the divisor fanout axes add 3/6-way unrollings
+    the pow2 sets never enumerate): front sizes, the headroom span and
+    the divisor-vs-pow2 gate on each (shape, arch)."""
+    from benchmarks.paper_tables import PROVISIONING_GEMMS
+
+    rows = []
+    for i, shape in enumerate(PROVISIONING_GEMMS):
+        name = f"gemm_softmax_np2_{i}"
+        for arch in (edge(), cloud()):
+            co = gemm_softmax(*shape)
+            ex = search(co, arch, mode="exhaustive")
+            ex_pow2 = search(co, arch, mode="exhaustive", fanouts="pow2")
+            pf3 = search(co, arch, mode="exhaustive", objective="pareto3")
+            hr = [p[2] for p in pf3.front]
+            row = {
+                "workload": name,
+                "dims": dict(co.dim_sizes),
+                "arch": arch.name,
+                "exhaustive_latency_s": ex.latency,
+                "pow2_latency_s": ex_pow2.latency,
+                "front3_size": len(pf3.front),
+                "best_latency_s": pf3.front[0][0],
+                "headroom_min": min(hr),
+                "headroom_max": max(hr),
+                "ok": (ex.latency <= ex_pow2.latency * (1 + REL_EPS)
+                       and pf3.front[0][0] <= ex.latency * (1 + REL_EPS)),
+            }
+            rows.append(row)
+            print(f"provisioning_{name}_{arch.name},"
+                  f"{row['best_latency_s']*1e6:.2f},"
+                  f"front3={row['front3_size']};"
+                  f"headroom={row['headroom_min']:.3f}"
+                  f"..{row['headroom_max']:.3f};"
+                  f"div_vs_pow2={row['exhaustive_latency_s']/row['pow2_latency_s']:.3f}")
+    ok = all(r["ok"] for r in rows)
+    print(f"provisioning_ok,0,{ok};rows={len(rows)}")
+    return {"pairs": rows, "ok": ok}
+
+
 def run_all(out_path: str = "BENCH_search.json") -> Dict:
+    from benchmarks.paper_tables import PROVISIONING_GEMMS
+
     spaces = [
         measure_space("gemm_softmax", gemm_softmax(512, 1024, 128), edge(),
                       axes="legacy"),
@@ -166,15 +231,22 @@ def run_all(out_path: str = "BENCH_search.json") -> Dict:
                       axes="full"),
         measure_space("attention", attention(1024, 256, 1024, 256), edge(),
                       axes="full"),
+        # divisor-complete showcase: non-pow2 dims widen the fanout axes
+        measure_space("gemm_softmax_np2",
+                      gemm_softmax(*PROVISIONING_GEMMS[0]), edge(),
+                      axes="full"),
     ]
-    pairs = exhaustive_vs_seed_randomized()
+    pairs = search_invariants()
+    prov = provisioning_study()
     result = {
-        "schema": "comet/search_throughput/v2",
+        "schema": "comet/search_throughput/v3",
         "speedup_floor": SPEEDUP_FLOOR,
         "spaces": spaces,
         "exhaustive_vs_randomized": pairs,
+        "provisioning": prov,
         "ok": (all(s["speedup"] >= SPEEDUP_FLOOR for s in spaces)
-               and all(p["ok"] for p in pairs)),
+               and all(p["ok"] for p in pairs)
+               and prov["ok"]),
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)

@@ -2,8 +2,9 @@
 # mapping representation + compound-operation cost model + map-space search.
 from . import (batcheval, collectives, cost, hardware, ir, mapping, search,
                validate, workload, yamlio)
-from .batcheval import (BatchResult, Topology, evaluate_specs_batch,
-                        evaluate_topology_grid, pareto_merge)
+from .batcheval import (BatchResult, ParetoArchive, Topology,
+                        evaluate_specs_batch, evaluate_topology_grid,
+                        pareto_merge, pareto_merge3)
 from .hardware import Arch, cloud, edge, tpu_v5e
 from .ir import MappingResult, MappingSpec, build_tree, evaluate_mapping
 from .search import SearchResult, search as map_search, search_many
@@ -14,8 +15,8 @@ __all__ = [
     "Arch", "cloud", "edge", "tpu_v5e",
     "MappingResult", "MappingSpec", "build_tree", "evaluate_mapping",
     "SearchResult", "map_search", "search_many",
-    "BatchResult", "Topology", "evaluate_specs_batch",
-    "evaluate_topology_grid", "pareto_merge",
+    "BatchResult", "ParetoArchive", "Topology", "evaluate_specs_batch",
+    "evaluate_topology_grid", "pareto_merge", "pareto_merge3",
     "CompoundOp", "attention", "flash_attention", "gemm",
     "gemm_layernorm", "gemm_softmax", "ssd_chunk",
 ]

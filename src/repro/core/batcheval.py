@@ -26,15 +26,22 @@ pass (used by the benchmark breakdown figures — no scalar tree walk).
 :meth:`BatchResult.pareto_front` extracts the latency/energy Pareto front
 of a grid as a vectorized skyline (argsort + running min), and
 ``objective='pareto'`` in :func:`repro.core.search.search` merges the
-per-topology fronts into a global front.
+per-topology fronts into a global front.  Every batch also carries a
+**capacity-headroom** channel (worst relative buffer slack, see
+:func:`repro.core.validate.validity_and_headroom`);
+:meth:`BatchResult.pareto_front3` filters the 3-D
+latency/energy/headroom front (minimize the first two, maximize the
+third) for provisioning studies (``objective='pareto3'``), and
+:class:`ParetoArchive` is the bounded online non-dominated archive the
+randomized search fallback uses for both front objectives.
 
 Two LRU caches sit on top:
 
 * a **grid cache** keyed on (compound-op signature, ``Arch.signature()``,
   topology, candidate axes) holding whole :class:`BatchResult` arrays, and
 * a **spec cache** keyed on (compound-op signature, ``Arch.signature()``,
-  spec) holding lightweight (latency, energy, valid) triples for the
-  randomized fallback path.
+  spec) holding lightweight (latency, energy, valid, headroom) tuples for
+  the randomized fallback path.
 
 Cache keys use the *full architecture parameter signature*
 (:meth:`repro.core.hardware.Arch.signature`), never ``arch.name`` alone:
@@ -55,12 +62,13 @@ from .cost import ENERGY_KEYS, LAT_KEYS, CostModel
 from .hardware import Arch
 from .ir import MappingSpec, build_tree
 from .mapping import SCHEDULES
-from .validate import validity_mask
+from .validate import validity_and_headroom
 from .workload import CompoundOp
 
 __all__ = [
     "Topology",
     "BatchResult",
+    "ParetoArchive",
     "co_signature",
     "numeric_axes",
     "enumerate_topologies",
@@ -68,6 +76,7 @@ __all__ = [
     "evaluate_topology_grid",
     "evaluate_cached",
     "pareto_merge",
+    "pareto_merge3",
     "cache_info",
     "cache_clear",
 ]
@@ -75,7 +84,7 @@ __all__ = [
 GEMM_EPILOGUE_COS = ("gemm", "gemm_softmax", "gemm_layernorm")
 ATTENTION_COS = ("attention", "flash_attention")
 
-OBJECTIVES = ("latency", "energy", "edp", "pareto")
+OBJECTIVES = ("latency", "energy", "edp", "pareto", "pareto3")
 
 
 @dataclass(frozen=True)
@@ -117,6 +126,9 @@ class BatchResult:
     latency: np.ndarray
     energy_pj: np.ndarray
     valid: np.ndarray
+    # Worst relative buffer slack per grid point (the 'pareto3' channel);
+    # negative where some buffer overflows.
+    headroom: Optional[np.ndarray] = None
     # Per-key breakdown arrays (same shape), present only when the batch
     # was evaluated with track_breakdown=True.
     lat_breakdown: Optional[Dict[str, np.ndarray]] = None
@@ -164,6 +176,20 @@ class BatchResult:
         keep[1:] = en_s[1:] < cummin[:-1]
         return idx[order[keep]]
 
+    def pareto_front3(self) -> np.ndarray:
+        """Indices of the non-dominated (latency, energy, headroom) points
+        among the valid grid entries — latency/energy minimized, headroom
+        maximized — in ascending-latency order.  Weakly dominated points
+        and duplicates are dropped, matching :meth:`pareto_front`."""
+        if self.headroom is None:
+            raise ValueError("batch evaluated without a headroom channel")
+        idx = np.flatnonzero(self.valid)
+        if idx.size == 0:
+            return idx
+        keep = _pareto3_sorted_indices(self.latency[idx], self.energy_pj[idx],
+                                       -self.headroom[idx])
+        return idx[keep]
+
     def spec_at(self, i: int) -> MappingSpec:
         return self.topo.spec(
             int(self.m_tiles[i]), int(self.k_tiles[i]), int(self.n_tiles[i]),
@@ -197,6 +223,112 @@ def pareto_merge(points: Sequence[Tuple]) -> List[Tuple]:
             out.append(p)
             best_en = p[1]
     return out
+
+
+def _pareto3_sorted_indices(a: np.ndarray, b: np.ndarray,
+                            c: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated points of the all-minimized (a, b, c)
+    triples, in lexicographic (a, b, c) order.
+
+    Lexsort makes every earlier point <= the current one in ``a``, so a
+    point is dominated iff some kept point has b <= and c <= (weak
+    dominance — duplicates are dropped too, as in the 2-D skyline); the
+    membership test against the kept staircase is a vectorized NumPy
+    reduction per point.  Kept points are final: a later point can never
+    dominate an earlier one under the lex order.
+    """
+    order = np.lexsort((c, b, a))
+    n = order.size
+    kb = np.empty(n)
+    kc = np.empty(n)
+    m = 0
+    kept: List[int] = []
+    for j in order:
+        if m and bool(np.any((kb[:m] <= b[j]) & (kc[:m] <= c[j]))):
+            continue
+        kb[m] = b[j]
+        kc[m] = c[j]
+        m += 1
+        kept.append(int(j))
+    return np.asarray(kept, dtype=np.int64)
+
+
+def pareto_merge3(points: Sequence[Tuple]) -> List[Tuple]:
+    """Non-dominated subset of ``(latency, energy, headroom, *payload)``
+    tuples — latency/energy minimized, headroom maximized — in
+    ascending-latency order: the merged 3-D front across several
+    :class:`BatchResult` fronts."""
+    if not points:
+        return []
+    a = np.asarray([p[0] for p in points], dtype=np.float64)
+    b = np.asarray([p[1] for p in points], dtype=np.float64)
+    c = np.asarray([-p[2] for p in points], dtype=np.float64)
+    return [points[j] for j in _pareto3_sorted_indices(a, b, c)]
+
+
+class ParetoArchive:
+    """Bounded online non-dominated archive (ROADMAP: the randomized
+    multi-objective fallback must not hold every valid sample once budgets
+    grow past ~10k).
+
+    Points are ``(latency, energy, *payload)`` for ``dims=2`` or
+    ``(latency, energy, headroom, *payload)`` for ``dims=3``
+    (latency/energy minimized, headroom maximized).  ``add`` rejects
+    points weakly dominated by the archive and evicts points the newcomer
+    dominates, so the archive is mutually non-dominated at all times.
+    When it outgrows ``maxlen`` it is thinned to every other point along
+    the latency ordering (both endpoints survive).  Thinning bounds
+    memory at the cost of front *fidelity*: once points have been
+    evicted, a later sample that only an evicted point dominated can be
+    re-admitted, so the final front is an approximation of the true front
+    over all evaluated samples — though always mutually non-dominated.
+    """
+
+    def __init__(self, dims: int = 2, maxlen: int = 512):
+        if dims not in (2, 3):
+            raise ValueError(f"dims must be 2 or 3, got {dims}")
+        if maxlen < 2:
+            raise ValueError(f"maxlen must be >= 2, got {maxlen}")
+        self.dims = dims
+        self.maxlen = maxlen
+        self._points: List[Tuple] = []
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    def _key(self, p: Tuple) -> Tuple[float, ...]:
+        # all-minimized objective vector
+        if self.dims == 2:
+            return (p[0], p[1])
+        return (p[0], p[1], -p[2])
+
+    def add(self, point: Tuple) -> bool:
+        """Insert ``point``; True iff it joined the archive (i.e. it is
+        not weakly dominated by a current member)."""
+        k = self._key(point)
+        keep: List[Tuple] = []
+        for q in self._points:
+            qk = self._key(q)
+            if all(a <= b for a, b in zip(qk, k)):
+                return False                    # dominated (or duplicate)
+            if not all(a <= b for a, b in zip(k, qk)):
+                keep.append(q)                  # q survives the newcomer
+        keep.append(point)
+        self._points = keep
+        if len(self._points) > self.maxlen:
+            self._thin()
+        return True
+
+    def _thin(self) -> None:
+        pts = sorted(self._points, key=self._key)
+        kept = pts[::2]
+        if kept[-1] is not pts[-1]:
+            kept.append(pts[-1])                # keep the far endpoint
+        self._points = kept
+
+    def front(self) -> List[Tuple]:
+        """The archived non-dominated points in ascending-latency order."""
+        return sorted(self._points, key=self._key)
 
 
 # ------------------------------------------------------------- signatures
@@ -314,17 +446,23 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
         root, tiling = build_tree(co, arch, spec)
     except (ValueError, KeyError):
         # Whole topology rejected (e.g. unknown variant for this builder):
-        # mirror the scalar path, which skips these specs.
-        zeros = np.zeros(shape)
+        # mirror the scalar path, which skips these specs.  Every field
+        # and breakdown key gets its OWN zeros array — a single shared
+        # buffer would alias them, so an in-place edit of one breakdown
+        # entry would silently corrupt every other key plus the
+        # latency/energy fields.
         return BatchResult(
             topo, m, k, n, spc, spo, sched_names,
-            zeros, zeros, np.zeros(shape, dtype=bool),
-            lat_breakdown={k_: zeros for k_ in LAT_KEYS}
+            np.zeros(shape), np.zeros(shape), np.zeros(shape, dtype=bool),
+            headroom=np.zeros(shape),
+            lat_breakdown={k_: np.zeros(shape) for k_ in LAT_KEYS}
             if track_breakdown else None,
-            energy_breakdown={k_: zeros for k_ in ENERGY_KEYS}
+            energy_breakdown={k_: np.zeros(shape) for k_ in ENERGY_KEYS}
             if track_breakdown else None)
-    valid = np.broadcast_to(
-        validity_mask(root, arch, tiling, co.tensors), shape).copy()
+    ok, hr = validity_and_headroom(root, arch, tiling, co.tensors)
+    valid = np.broadcast_to(ok, shape).copy()
+    headroom = np.ascontiguousarray(
+        np.broadcast_to(np.asarray(hr, dtype=np.float64), shape))
     cost = CostModel(arch, tiling, co.tensors,
                      track_breakdown=track_breakdown).evaluate(root)
     latency = np.ascontiguousarray(
@@ -334,7 +472,7 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
     lat_bd = dict(cost.lat_breakdown) if track_breakdown else None
     en_bd = dict(cost.energy_breakdown) if track_breakdown else None
     return BatchResult(topo, m, k, n, spc, spo, sched_names,
-                       latency, energy, valid,
+                       latency, energy, valid, headroom=headroom,
                        lat_breakdown=lat_bd, energy_breakdown=en_bd)
 
 
@@ -442,10 +580,10 @@ def evaluate_topology_grid(co: CompoundOp, arch: Arch, topo: Topology,
 
 
 def evaluate_cached(co: CompoundOp, arch: Arch, spec: MappingSpec
-                    ) -> Optional[Tuple[float, float, bool]]:
-    """Lightweight cached per-spec evaluation: (latency, energy_pj, valid),
-    or None when the spec is rejected outright (the scalar path raises).
-    Shared by the randomized search fallback across searches."""
+                    ) -> Optional[Tuple[float, float, bool, float]]:
+    """Lightweight cached per-spec evaluation: (latency, energy_pj, valid,
+    headroom), or None when the spec is rejected outright (the scalar path
+    raises).  Shared by the randomized search fallback across searches."""
     key = (co_signature(co), arch.signature(), spec)
     hit = _SPEC_CACHE.get(key)
     if hit is not None:
@@ -453,7 +591,7 @@ def evaluate_cached(co: CompoundOp, arch: Arch, spec: MappingSpec
     from .ir import evaluate_mapping
     try:
         r = evaluate_mapping(co, arch, spec)
-        val = (r.latency, r.energy_pj, r.valid)
+        val = (r.latency, r.energy_pj, r.valid, r.headroom)
     except (ValueError, KeyError):
         val = ()
     _SPEC_CACHE.put(key, val)

@@ -19,12 +19,32 @@ CO nodes).  Each model returns:
 where ``volume_bytes`` is the total bytes moved across the NoC per
 participant (the busiest node's traffic, which Eq. 3 charges), and
 ``hops`` is the summed hop distance of its exchange schedule.
+
+Tabulated factors
+-----------------
+For every collective type the busiest-node volume is ``DV * f(P)`` where
+``f`` depends only on the participant count (and the NoC, for All-to-All
+hops) — the per-partition communication-factor formulation of DFModel and
+of the multi-commodity-flow view of collectives.  Both the scalar path
+and the batched array path therefore read one precomputed, per-NoC cached
+``P -> (volume_factor, hops, steps)`` table (:func:`_factor_table`): the
+scalar path indexes it at one P, the array path gathers it with a single
+``np.take``, so the two are bit-identical by construction no matter how
+many unique participant counts a divisor-complete fanout grid produces.
+
+Non-power-of-two participants use the dissemination (Bruck) exchange
+schedule: step ``i`` moves ``min(2^i, P - 2^i)`` shards of ``DV/P``,
+which sums to exactly ``(P-1)/P * DV`` for *every* P.  For powers of two
+this equals the recursive halving/doubling volumes; for other P it
+replaces the old next-power-of-two round-up that silently overcharged
+3/5/6-way fanouts.
 """
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -35,6 +55,7 @@ __all__ = [
     "CollectiveCost",
     "collective_cost",
     "noc_latency",
+    "collective_cache_clear",
     "COLLECTIVE_TYPES",
 ]
 
@@ -57,9 +78,7 @@ class CollectiveCost:
 
 def _step_distances(noc: NoCParams, participants: int) -> Tuple[int, ...]:
     """Manhattan distance of the partner at linear offset 2^i, for each
-    recursive-doubling step i (log2 P steps).  Non-power-of-two participant
-    counts are rounded up to the next power of two (standard dissemination
-    fallback)."""
+    dissemination step i (ceil(log2 P) steps)."""
     if participants <= 1:
         return ()
     steps = max(1, math.ceil(math.log2(participants)))
@@ -70,6 +89,90 @@ def _step_distances(noc: NoCParams, participants: int) -> Tuple[int, ...]:
     )
 
 
+# ----------------------------------------------------- per-P factor tables
+
+
+@dataclass(frozen=True)
+class _FactorTable:
+    """P-indexed (volume_factor, hops, steps) arrays for one (NoC,
+    collective type): ``volume_bytes = DV * volume_factor[P]``.  Arrays are
+    read-only — they are shared across every query against this NoC."""
+
+    volume_factor: np.ndarray   # float64, vol = DV * volume_factor[P]
+    hops: np.ndarray            # int64
+    steps: np.ndarray           # int64
+
+    @property
+    def size(self) -> int:
+        return int(self.volume_factor.shape[0])
+
+
+# NoCParams is a frozen dataclass, so instances hash by parameter value:
+# equal-parameter NoCs share one table.  search_many fans searches out over
+# threads that share these caches, hence the lock around table builds.
+_FACTOR_TABLES: Dict[Tuple[NoCParams, str], _FactorTable] = {}
+_MESH_AVG_CACHE: Dict[NoCParams, float] = {}
+_TABLE_LOCK = threading.Lock()
+
+
+def collective_cache_clear() -> None:
+    """Drop the per-NoC factor tables and mesh-distance cache (tests)."""
+    with _TABLE_LOCK:
+        _FACTOR_TABLES.clear()
+        _MESH_AVG_CACHE.clear()
+
+
+def _scalar_factors(col_type: str, P: int, noc: NoCParams
+                    ) -> Tuple[float, int, int]:
+    """(volume_factor, hops, steps) for one participant count — the single
+    source of truth the table is built from.
+
+    Dissemination (Bruck) schedule: step i moves min(2^i, P-2^i) shards of
+    DV/P, so every type's busiest-node volume is exactly (P-1)/P * DV
+    (recursive halving/doubling recovers the same volumes at power-of-two
+    P); All-Reduce is ReduceScatter + AllGather.  Gather/Broadcast are
+    binomial trees whose root moves (P-1)/P * DV; All-to-All is P-1 paired
+    direct exchanges at the mesh-average Manhattan distance.
+    """
+    if P <= 1:
+        return 0.0, 0, 0
+    if col_type == "AllReduce":
+        vf, hops, steps = _scalar_factors("ReduceScatter", P, noc)
+        return 2.0 * vf, 2 * hops, 2 * steps
+    if col_type == "AllToAll":
+        avg = _mesh_avg_distance(noc)
+        return (P - 1) / P, int(round(avg * (P - 1))), P - 1
+    dists = _step_distances(noc, P)
+    if col_type in ("ReduceScatter", "AllGather", "Gather", "Broadcast"):
+        return (P - 1) / P, sum(dists), len(dists)
+    raise ValueError(f"unknown collective type {col_type!r}")
+
+
+def _factor_table(noc: NoCParams, col_type: str, max_p: int) -> _FactorTable:
+    """Cached (noc, col_type) -> P-indexed factor table covering at least
+    ``max_p`` participants (tables are built to the NoC node count up
+    front, so divisor-complete fanout grids never rebuild them)."""
+    key = (noc, col_type)
+    tbl = _FACTOR_TABLES.get(key)
+    if tbl is not None and tbl.size > max_p:
+        return tbl
+    with _TABLE_LOCK:
+        tbl = _FACTOR_TABLES.get(key)
+        if tbl is not None and tbl.size > max_p:
+            return tbl
+        size = max(max_p, noc.num_nodes, 1) + 1
+        vf = np.zeros(size, dtype=np.float64)
+        hops = np.zeros(size, dtype=np.int64)
+        steps = np.zeros(size, dtype=np.int64)
+        for p in range(2, size):
+            vf[p], hops[p], steps[p] = _scalar_factors(col_type, p, noc)
+        for arr in (vf, hops, steps):
+            arr.flags.writeable = False
+        tbl = _FactorTable(vf, hops, steps)
+        _FACTOR_TABLES[key] = tbl
+        return tbl
+
+
 def collective_cost(
     col_type: str,
     data_volume: float,
@@ -78,18 +181,16 @@ def collective_cost(
 ) -> CollectiveCost:
     """Volume/hops for one collective over ``participants`` peers.
 
-    Recursive halving (Reduce-Scatter): step i exchanges DV/2^(i+1);
-    recursive doubling (All-Gather): step i exchanges DV*2^i/P.
-    All-Reduce = RS + AG  => 2*DV*(P-1)/P volume.
-    Gather/Broadcast: tree over log2 P steps, total (P-1)/P * DV through
-    the root.  All-to-all: each node exchanges DV*(P-1)/P in P-1 direct
-    transfers (paired exchange schedule).
+    Every type moves (P-1)/P * DV through the busiest node (All-Reduce =
+    RS + AG => 2*DV*(P-1)/P); see :func:`_scalar_factors` for the exchange
+    schedules.  Both the scalar path and the array path read the cached
+    per-NoC factor table, so array results are bit-identical elementwise
+    to the scalar-P calls.
 
     ``participants`` may be a NumPy int array (the batched engine folds
     the spatial-fanout axes into its grid, so CO nodes carry one
     participant count per grid point); the result is then a
-    :class:`CollectiveCost` of arrays, computed per unique participant
-    count through this same scalar-P code so both paths share one formula.
+    :class:`CollectiveCost` of arrays gathered from the same table.
     """
     if is_array(participants):
         return _collective_cost_array(col_type, data_volume, participants,
@@ -105,84 +206,60 @@ def collective_cost(
     if col_type not in COLLECTIVE_TYPES:
         raise ValueError(f"unknown collective type {col_type!r}")
 
-    dists = _step_distances(noc, P)
-    steps = len(dists)
-    shard = data_volume / P
-
-    if col_type == "ReduceScatter":
-        # recursive halving: volumes DV/2, DV/4, ... DV/P
-        vol = sum(data_volume / (1 << (i + 1)) for i in range(steps))
-        hops = sum(dists)
-    elif col_type == "AllGather":
-        # recursive doubling: volumes DV/P, 2DV/P, ... DV/2
-        vol = sum(shard * (1 << i) for i in range(steps))
-        hops = sum(dists)
-    elif col_type == "AllReduce":
-        rs = collective_cost("ReduceScatter", data_volume, P, noc)
-        ag = collective_cost("AllGather", data_volume, P, noc)
-        return CollectiveCost(rs.volume_bytes + ag.volume_bytes,
-                              rs.hops + ag.hops, rs.steps + ag.steps)
-    elif col_type == "Gather":
-        # binomial tree toward the root; root receives (P-1)/P * DV
-        vol = data_volume * (P - 1) / P
-        hops = sum(dists)
-    elif col_type == "Broadcast":
-        vol = data_volume * (P - 1) / P
-        hops = sum(dists)
-    elif col_type == "AllToAll":
-        vol = data_volume * (P - 1) / P
-        # P-1 paired exchanges; average Manhattan distance on the mesh
-        avg = _mesh_avg_distance(noc)
-        hops = int(round(avg * (P - 1)))
-        steps = P - 1
-    else:  # pragma: no cover
-        raise AssertionError(col_type)
-
+    tbl = _factor_table(noc, col_type, P)
+    vol = data_volume * tbl.volume_factor[P]
+    hops = int(tbl.hops[P])
+    steps = int(tbl.steps[P])
     if is_array(vol):
-        # Batched path: grid points with dv <= 0 move nothing (the scalar
-        # path short-circuits those to a zero CollectiveCost above).
+        # Batched-DV path: grid points with dv <= 0 move nothing (the
+        # scalar path short-circuits those to a zero CollectiveCost above).
         vol = np.where(np.asarray(data_volume) > 0, vol, 0.0)
-        return CollectiveCost(vol, int(hops), steps)
-    return CollectiveCost(float(vol), int(hops), steps)
+        return CollectiveCost(vol, hops, steps)
+    return CollectiveCost(float(vol), hops, steps)
 
 
 def _collective_cost_array(col_type: str, data_volume, participants,
                            noc: NoCParams) -> CollectiveCost:
-    """Batched participants: evaluate the scalar-P formulas once per unique
-    participant count and mask-select the results.  Participant axes come
-    from small spatial-fanout candidate sets (a handful of unique values),
-    so this is a short loop over exact re-executions of the scalar path —
-    results are bit-identical elementwise."""
+    """Batched participants: gather (volume_factor, hops, steps) from the
+    cached per-NoC table with one ``np.take`` per field.  The scalar path
+    reads the same table entries, so results are bit-identical elementwise
+    regardless of how many unique participant counts the grid holds."""
+    if col_type not in COLLECTIVE_TYPES:
+        raise ValueError(f"unknown collective type {col_type!r}")
     P = np.asarray(participants)
     dv = np.asarray(data_volume, dtype=np.float64)
     shape = np.broadcast_shapes(P.shape, dv.shape)
-    vol = np.zeros(shape)
-    hops = np.zeros(shape, dtype=np.int64)
-    steps = np.zeros(shape, dtype=np.int64)
-    for p in np.unique(P):
-        p = int(p)
-        if p <= 1:
-            continue        # zero-cost, matching the scalar short-circuit
-        cp = collective_cost(col_type, data_volume, p, noc)
-        sel = P == p
-        vol = np.where(sel, cp.volume_bytes, vol)
-        hops = np.where(sel, cp.hops, hops)
-        steps = np.where(sel, cp.steps, steps)
-    vol = np.where(dv > 0, vol, 0.0)
-    return CollectiveCost(vol, hops, steps)
+    max_p = int(P.max()) if P.size else 1
+    tbl = _factor_table(noc, col_type, max_p)
+    # P <= 1 rows in the table are zero, matching the scalar short-circuit;
+    # negative requests clamp onto the zero row.
+    idx = np.maximum(P, 0)
+    vf = np.take(tbl.volume_factor, idx)
+    vol = np.where(dv > 0, dv * vf, 0.0)
+    hops = np.broadcast_to(np.take(tbl.hops, idx), shape)
+    steps = np.broadcast_to(np.take(tbl.steps, idx), shape)
+    return CollectiveCost(np.broadcast_to(vol, shape), hops, steps)
 
 
 def _mesh_avg_distance(noc: NoCParams) -> float:
+    """Mean Manhattan distance between distinct nodes of the NoC mesh,
+    cached per NoCParams — the O(nodes^2) scan runs once per NoC, not once
+    per All-to-All query (a 16x16 mesh is ~65k ``manhattan`` calls)."""
+    hit = _MESH_AVG_CACHE.get(noc)
+    if hit is not None:
+        return hit
     r, c = noc.mesh
     if r * c <= 1:
-        return 1.0
-    # mean Manhattan distance between distinct nodes of an r x c mesh
-    total = 0
-    for a in range(r * c):
-        for b in range(r * c):
-            if a != b:
-                total += noc.manhattan(a, b)
-    return total / (r * c * (r * c - 1))
+        out = 1.0
+    else:
+        total = 0
+        for a in range(r * c):
+            for b in range(r * c):
+                if a != b:
+                    total += noc.manhattan(a, b)
+        out = total / (r * c * (r * c - 1))
+    _MESH_AVG_CACHE[noc] = out
+    return out
 
 
 def noc_latency(cost: CollectiveCost, noc: NoCParams) -> float:

@@ -19,7 +19,7 @@ published-ballpark constants (documented inline); see DESIGN.md §8 —
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field, fields, replace
 from typing import Dict, Optional, Tuple
 
 __all__ = [
@@ -165,9 +165,18 @@ class Arch:
         Enumerated via ``dataclasses.fields`` so fields added later are
         covered automatically; all members are frozen dataclasses / tuples,
         so the tuple is hashable and equality tracks parameter equality.
+
+        Memoized on the (frozen) instance: this sits on the hot search
+        path as the cache-key prefix of every grid/spec lookup, so the
+        field tuple is built once per Arch object.  ``dataclasses.replace``
+        constructs a fresh instance, so derived Archs never inherit a
+        stale signature.
         """
-        import dataclasses
-        return tuple(getattr(self, f.name) for f in dataclasses.fields(self))
+        sig = self.__dict__.get("_signature_memo")
+        if sig is None:
+            sig = tuple(getattr(self, f.name) for f in fields(self))
+            object.__setattr__(self, "_signature_memo", sig)
+        return sig
 
     def spatial_fanout(self, level: str) -> int:
         """Number of peer instances of ``level`` under one parent instance."""

@@ -30,7 +30,7 @@ from .cost import CostModel, NodeCost
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Loop, Node, TileNode, Tiling
 from .numerics import ceil_div, is_array, vmax, vmin
-from .validate import validate_tree
+from .validate import validate_and_headroom
 from .workload import CompoundOp, Operation, TensorSpec
 
 __all__ = ["MappingSpec", "build_tree", "evaluate_mapping", "MappingResult"]
@@ -71,6 +71,10 @@ class MappingResult:
     tiling: Tiling
     spec: MappingSpec
     valid: bool
+    # Worst relative buffer slack: min over non-DRAM tile nodes of
+    # (capacity - resident)/capacity — the provisioning ("pareto3")
+    # objective channel.  Negative iff some buffer overflows.
+    headroom: float = 1.0
 
     @property
     def latency(self) -> float:
@@ -539,6 +543,7 @@ def build_tree(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[TileNode,
 
 def evaluate_mapping(co: CompoundOp, arch: Arch, spec: MappingSpec) -> MappingResult:
     root, tiling = build_tree(co, arch, spec)
-    valid = validate_tree(root, arch, tiling, co.tensors)
+    valid, headroom = validate_and_headroom(root, arch, tiling, co.tensors)
     cost = CostModel(arch, tiling, co.tensors).evaluate(root)
-    return MappingResult(cost=cost, root=root, tiling=tiling, spec=spec, valid=valid)
+    return MappingResult(cost=cost, root=root, tiling=tiling, spec=spec,
+                         valid=valid, headroom=headroom)

@@ -13,10 +13,21 @@ sets, huge dims) it falls back to the paper's randomized + hill-climb
 sampling (budget up to 10,000 iterations, deterministic under ``seed``),
 now served through a shared LRU evaluation cache.
 
+The spatial-fanout axes are **divisor-complete** by default: the
+``sp_cluster``/``sp_core`` candidate sets take every divisor of the
+physical instance counts *and* every divisor of the partitioned workload
+dims that fits them (so a 3-way unrolling of N=768 on a 4-cluster mesh is
+enumerated, not just powers of two), on top of the power-of-two ladder.
+``candidate_specs(..., fanouts='pow2')`` recovers the old sets and
+``divisor_tilings=True`` extends the m/k/n temporal axes the same way.
+
 ``objective='pareto'`` returns the latency/energy Pareto front instead of
 a single scalar winner: ``SearchResult.front`` holds the non-dominated
 (latency, energy_pj, spec) points in ascending-latency order and
 ``SearchResult.best`` is the front's minimum-latency mapping.
+``objective='pareto3'`` adds the capacity-headroom channel for
+provisioning studies: front points are (latency, energy_pj, headroom,
+spec), latency/energy minimized and headroom maximized.
 
 ``search_many()`` fans independent (workload, arch, kwargs) search cells
 out over a ``concurrent.futures`` pool — the sweep driver used by the
@@ -33,18 +44,26 @@ from concurrent.futures import (BrokenExecutor, ProcessPoolExecutor,
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .batcheval import (OBJECTIVES, enumerate_topologies, evaluate_cached,
-                        evaluate_topology_grid, grid_size, pareto_merge)
+from .batcheval import (OBJECTIVES, ParetoArchive, enumerate_topologies,
+                        evaluate_cached, evaluate_topology_grid, grid_size,
+                        pareto_merge, pareto_merge3)
 from .hardware import Arch
 from .ir import MappingResult, MappingSpec, evaluate_mapping
 from .workload import CompoundOp
 
 __all__ = ["SearchResult", "search", "search_many", "parallel_map",
-           "candidate_specs", "pow2_tilings", "EXHAUSTIVE_LIMIT"]
+           "candidate_specs", "pow2_tilings", "divisors",
+           "fanout_candidates", "EXHAUSTIVE_LIMIT"]
 
 # Exhaustive enumeration cap: above this many grid points per search the
 # randomized fallback kicks in.  The paper-space grids are ~1e3 points.
 EXHAUSTIVE_LIMIT = 65536
+
+# Randomized fallback: how many resamples one iteration spends to dodge
+# an already-seen spec before conceding the iteration, and the bound on
+# the online Pareto archive (ROADMAP: don't hold every valid sample).
+DUPLICATE_RETRIES = 16
+ARCHIVE_MAXLEN = 512
 
 
 @dataclass
@@ -52,11 +71,15 @@ class SearchResult:
     best: MappingResult
     evaluated: int
     valid: int
-    history: List[Tuple[int, float]] = field(default_factory=list)  # (iter, best latency)
+    # (iteration, best objective score so far): latency/energy/edp score
+    # for scalar objectives, latency (the hill-climb steer) for the front
+    # objectives — NOT unconditionally latency.
+    history: List[Tuple[int, float]] = field(default_factory=list)
     mode: str = "randomized"    # 'exhaustive' | 'randomized'
     # objective='pareto': non-dominated (latency, energy_pj, spec) points,
-    # ascending latency.  None for scalar objectives.
-    front: Optional[List[Tuple[float, float, MappingSpec]]] = None
+    # ascending latency; objective='pareto3': (latency, energy_pj,
+    # headroom, spec).  None for scalar objectives.
+    front: Optional[List[Tuple]] = None
 
     @property
     def latency(self) -> float:
@@ -80,10 +103,62 @@ def pow2_tilings(size: int, cap: int = 4096) -> List[int]:
     return out
 
 
+def divisors(n: int, cap: int = 4096) -> List[int]:
+    """All divisors of ``n`` up to ``cap``, ascending (always >= [1])."""
+    n = int(n)
+    if n <= 1:
+        return [1]
+    out = set()
+    for d in range(1, math.isqrt(n) + 1):
+        if n % d == 0:
+            if d <= cap:
+                out.add(d)
+            q = n // d
+            if q <= cap:
+                out.add(q)
+    return sorted(out)
+
+
+def _with_divisors(base: List[int], size: int, cap: int) -> List[int]:
+    """Union of a pow2 ladder with the divisors of ``size`` up to ``cap``."""
+    return sorted(set(base) | set(divisors(size, cap=cap)))
+
+
+def fanout_candidates(instances: int, dim_sizes: Sequence[int] = ()
+                      ) -> List[int]:
+    """Divisor-complete spatial-fanout candidates for a level with
+    ``instances`` physical peers: the power-of-two ladder (so the set is
+    always a superset of the old candidates), every divisor of the
+    instance count, and every divisor of the partitioned workload dims
+    that fits the level — e.g. N=768 on a 4-cluster mesh adds the 3-way
+    unrolling that pow2 sets never consider."""
+    out = set(pow2_tilings(instances)) | set(divisors(instances))
+    for size in dim_sizes:
+        out |= set(divisors(int(size), cap=instances))
+    return sorted(out)
+
+
+def _partition_dim_sizes(co: CompoundOp) -> List[int]:
+    """The dim sizes the tree builders spatially partition: M/N for the
+    GEMM-epilogue and attention families, every dim for the generic
+    builder (it picks the most-shared dim at build time)."""
+    sizes = [v for d, v in co.dim_sizes.items() if d in ("M", "N")]
+    return sizes or list(co.dim_sizes.values())
+
+
 def candidate_specs(co: CompoundOp, arch: Arch, *,
                     variants: Optional[Sequence[str]] = None,
-                    allow_stats_gran: bool = False) -> Dict[str, List]:
-    """The discrete choice sets for each MappingSpec field."""
+                    allow_stats_gran: bool = False,
+                    fanouts: str = "divisors",
+                    divisor_tilings: bool = False) -> Dict[str, List]:
+    """The discrete choice sets for each MappingSpec field.
+
+    ``fanouts='divisors'`` (default) makes the sp_cluster/sp_core axes
+    divisor-complete (:func:`fanout_candidates`); ``'pow2'`` restores the
+    power-of-two-only sets.  ``divisor_tilings=True`` additionally unions
+    the m/k/n temporal tile counts with the divisors of their dims (same
+    caps), for workloads whose dims have non-pow2 factors.
+    """
     M = co.dim_sizes.get("M", 1)
     K = co.dim_sizes.get("K", 1)
     N = co.dim_sizes.get("N", 1)
@@ -95,16 +170,32 @@ def candidate_specs(co: CompoundOp, arch: Arch, *,
         else:
             variants = ["unfused", "fused_dist"]
     grans = ["tile", "stats"] if allow_stats_gran else ["tile"]
+    m_tiles = pow2_tilings(M)
+    k_tiles = pow2_tilings(K, cap=64)
+    n_tiles = pow2_tilings(N, cap=256)
+    if divisor_tilings:
+        m_tiles = _with_divisors(m_tiles, M, 4096)
+        k_tiles = _with_divisors(k_tiles, K, 64)
+        n_tiles = _with_divisors(n_tiles, N, 256)
+    if fanouts == "pow2":
+        sp_cluster = pow2_tilings(arch.num_clusters)
+        sp_core = pow2_tilings(arch.cores_per_cluster)
+    elif fanouts == "divisors":
+        # Spatial unrolling fanouts (Fig. 1 axis 2): divisor-complete
+        # candidate sets — free grid axes of the batched engine, costed
+        # through the tabulated per-P collective factors.
+        part = _partition_dim_sizes(co)
+        sp_cluster = fanout_candidates(arch.num_clusters, part)
+        sp_core = fanout_candidates(arch.cores_per_cluster, part)
+    else:
+        raise ValueError(f"unknown fanouts mode {fanouts!r}")
     return {
         "variant": list(variants),
-        "m_tiles": pow2_tilings(M),
-        "k_tiles": pow2_tilings(K, cap=64),
-        "n_tiles": pow2_tilings(N, cap=256),
-        # Spatial unrolling fanouts (Fig. 1 axis 2): powers of two up to
-        # the physical instance counts; free grid axes of the batched
-        # engine, no longer frozen to the §V-C2 full-fanout choice.
-        "sp_cluster": pow2_tilings(arch.num_clusters),
-        "sp_core": pow2_tilings(arch.cores_per_cluster),
+        "m_tiles": m_tiles,
+        "k_tiles": k_tiles,
+        "n_tiles": n_tiles,
+        "sp_cluster": sp_cluster,
+        "sp_core": sp_core,
         "schedule": ["sequential", "pipelined"],
         "collective_gran": grans,
         "loop_order_gb": [("M", "N"), ("N", "M")],
@@ -150,12 +241,18 @@ def search(co: CompoundOp, arch: Arch, *,
            objective: str = "latency",
            variants: Optional[Sequence[str]] = None,
            allow_stats_gran: bool = False,
+           fanouts: str = "divisors",
+           divisor_tilings: bool = False,
            hillclimb_frac: float = 0.5,
            mode: str = "auto",
            exhaustive_limit: int = EXHAUSTIVE_LIMIT) -> SearchResult:
     """Map-space search.  ``objective`` is 'latency', 'energy', 'edp'
-    (energy-delay product) or 'pareto' (latency/energy front; see
-    ``SearchResult.front``).
+    (energy-delay product), 'pareto' (latency/energy front) or 'pareto3'
+    (latency/energy/capacity-headroom front; see ``SearchResult.front``).
+
+    ``fanouts``/``divisor_tilings`` select the candidate axes (see
+    :func:`candidate_specs`): divisor-complete spatial fanouts by default,
+    ``fanouts='pow2'`` for the legacy power-of-two-only sets.
 
     ``mode``: 'exhaustive' evaluates the whole enumerable space through
     the batched engine; 'randomized' is the paper's sampling + hill-climb;
@@ -166,7 +263,9 @@ def search(co: CompoundOp, arch: Arch, *,
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}")
     cands = candidate_specs(co, arch, variants=variants,
-                            allow_stats_gran=allow_stats_gran)
+                            allow_stats_gran=allow_stats_gran,
+                            fanouts=fanouts,
+                            divisor_tilings=divisor_tilings)
     if mode == "auto":
         topos = enumerate_topologies(co, cands)
         total = len(topos) * grid_size(co, cands)
@@ -182,18 +281,24 @@ def search(co: CompoundOp, arch: Arch, *,
 
 def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
                        objective: str) -> SearchResult:
-    pareto = objective == "pareto"
+    pareto = objective in ("pareto", "pareto3")
     best_spec: Optional[MappingSpec] = None
     best_score = math.inf
     best_latency = math.inf
     evaluated = valid = 0
     history: List[Tuple[int, float]] = []
-    front_pts: List[Tuple[float, float, MappingSpec]] = []
+    front_pts: List[Tuple] = []
     for topo in enumerate_topologies(co, cands):
         br = evaluate_topology_grid(co, arch, topo, cands)
         evaluated += br.size
         valid += int(br.valid.sum())
-        if pareto:
+        if objective == "pareto3":
+            front_pts.extend(
+                (float(br.latency[i]), float(br.energy_pj[i]),
+                 float(br.headroom[i]), br.spec_at(i))
+                for i in br.pareto_front3())
+            continue
+        if objective == "pareto":
             # per-topology vectorized skyline; merged globally below
             front_pts.extend(
                 (float(br.latency[i]), float(br.energy_pj[i]), br.spec_at(i))
@@ -207,12 +312,14 @@ def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
             best_score = s
             best_spec = br.spec_at(i)
             best_latency = float(br.latency[i])
-            history.append((evaluated, best_latency))
-    front: Optional[List[Tuple[float, float, MappingSpec]]] = None
+            history.append((evaluated, s))
+    front: Optional[List[Tuple]] = None
     if pareto:
-        front = pareto_merge(front_pts)
+        front = (pareto_merge3(front_pts) if objective == "pareto3"
+                 else pareto_merge(front_pts))
         if front:
-            best_latency, _, best_spec = front[0]
+            best_latency = front[0][0]
+            best_spec = front[0][-1]
             history.append((evaluated, best_latency))
     if best_spec is None:
         raise RuntimeError(f"no valid mapping found for {co.name} on {arch.name}")
@@ -224,47 +331,57 @@ def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
 def _search_randomized(co: CompoundOp, arch: Arch, cands: Dict[str, List], *,
                        budget: int, seed: int, objective: str,
                        hillclimb_frac: float) -> SearchResult:
-    pareto = objective == "pareto"
-    # Pareto mode archives every valid sample and extracts the front at
-    # the end; latency steers the hill-climb.
+    pareto = objective in ("pareto", "pareto3")
+    # Front modes keep a bounded online non-dominated archive instead of
+    # every valid sample (ROADMAP); latency steers the hill-climb.
     scalar_objective = "latency" if pareto else objective
     rng = random.Random(seed)
     best_spec: Optional[MappingSpec] = None
     best_score = math.inf
     evaluated = valid = 0
     history: List[Tuple[int, float]] = []
-    archive: List[Tuple[float, float, MappingSpec]] = []
+    archive = (ParetoArchive(dims=3 if objective == "pareto3" else 2,
+                             maxlen=ARCHIVE_MAXLEN) if pareto else None)
     seen = set()
 
     explore = max(1, int(budget * (1.0 - hillclimb_frac)))
     for i in range(budget):
-        if best_spec is None or i < explore:
-            spec = _sample(rng, cands)
-        else:
-            spec = _mutate(rng, best_spec, cands)
-        if spec in seen:
+        # An already-seen spec would burn the iteration without learning
+        # anything — resample (bounded) until an unseen one turns up.
+        spec = None
+        for _ in range(DUPLICATE_RETRIES):
+            cand = (_sample(rng, cands) if best_spec is None or i < explore
+                    else _mutate(rng, best_spec, cands))
+            if cand not in seen:
+                spec = cand
+                break
+        if spec is None:
             continue
         seen.add(spec)
         r = evaluate_cached(co, arch, spec)
         if r is None:
             continue
-        latency, energy_pj, is_valid = r
+        latency, energy_pj, is_valid, headroom = r
         evaluated += 1
         if is_valid:
             valid += 1
-            if pareto:
-                archive.append((latency, energy_pj, spec))
+            if objective == "pareto3":
+                archive.add((latency, energy_pj, headroom, spec))
+            elif objective == "pareto":
+                archive.add((latency, energy_pj, spec))
         s = _score_of(latency, energy_pj, is_valid, scalar_objective)
         if s < best_score:
             best_spec, best_score = spec, s
-            history.append((i, latency))
+            # convergence curve logs the objective score (== latency for
+            # the latency-steered front modes), not latency regardless
+            history.append((i, s))
 
     if best_spec is None:
         raise RuntimeError(f"no valid mapping found for {co.name} on {arch.name}")
     best = evaluate_mapping(co, arch, best_spec)
     return SearchResult(best=best, evaluated=evaluated, valid=valid,
                         history=history, mode="randomized",
-                        front=pareto_merge(archive) if pareto else None)
+                        front=archive.front() if pareto else None)
 
 
 # ------------------------------------------------------------ sweep driver

@@ -13,9 +13,11 @@ import numpy as np
 
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
+from .numerics import vmin
 from .workload import TensorSpec
 
-__all__ = ["validate_tree", "validity_mask", "ValidationError",
+__all__ = ["validate_tree", "validate_and_headroom", "validity_mask",
+           "validity_and_headroom", "capacity_headroom", "ValidationError",
            "residency_report"]
 
 
@@ -86,10 +88,64 @@ def validity_mask(node: Node, arch: Arch, tiling: Tiling,
     TileNode's staged tensors fit its level capacity (exactly the grid
     points for which the per-spec path would return True rather than
     raising or returning False)."""
+    return validity_and_headroom(node, arch, tiling, tensors)[0]
+
+
+def validity_and_headroom(node: Node, arch: Arch, tiling: Tiling,
+                          tensors: Dict[str, TensorSpec]
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """(validity mask, capacity headroom) from one residency walk.
+
+    Headroom is the mapping's worst relative slack: ``min`` over all
+    non-DRAM TileNodes of ``(capacity - resident) / capacity``.  1.0 means
+    the buffers are untouched, 0.0 exactly full, negative over capacity
+    (such points are also invalid).  It is the third objective channel of
+    the provisioning-study Pareto fronts (``objective='pareto3'``)."""
     ok = np.asarray(tiling.overfactor_mask())
+    hr = None
     for level, _label, resident, cap in residency_report(node, arch, tiling,
                                                          tensors):
         if level == "DRAM":
             continue  # DRAM holds full tensors by construction
         ok = np.logical_and(ok, resident <= cap)
-    return ok
+        frac = (cap - np.asarray(resident, dtype=np.float64)) / cap
+        hr = frac if hr is None else np.minimum(hr, frac)
+    if hr is None:
+        hr = np.asarray(1.0)
+    return ok, hr
+
+
+def validate_and_headroom(node: Node, arch: Arch, tiling: Tiling,
+                          tensors: Dict[str, TensorSpec]
+                          ) -> Tuple[bool, float]:
+    """Scalar-path fusion of :func:`validate_tree` and
+    :func:`capacity_headroom`: one residency walk yields both the
+    validity verdict and the headroom (the per-spec evaluation hot path
+    must not pay the tensor-tile walk twice).  Raises like
+    ``validate_tree`` for inconsistent tilings."""
+    tiling.validate()
+    valid = True
+    hr = 1.0
+    for level, _label, resident, cap in residency_report(node, arch, tiling,
+                                                         tensors):
+        if level == "DRAM":
+            continue
+        if resident > cap:
+            valid = False
+        hr = vmin(hr, (cap - resident) / cap)
+    return valid, hr
+
+
+def capacity_headroom(node: Node, arch: Arch, tiling: Tiling,
+                      tensors: Dict[str, TensorSpec]) -> float:
+    """Scalar-path capacity headroom: ``min`` over non-DRAM TileNodes of
+    ``(capacity - resident) / capacity`` (see
+    :func:`validity_and_headroom`); plain Python float for scalar
+    tilings."""
+    hr = 1.0
+    for level, _label, resident, cap in residency_report(node, arch, tiling,
+                                                         tensors):
+        if level == "DRAM":
+            continue
+        hr = vmin(hr, (cap - resident) / cap)
+    return hr

@@ -20,7 +20,7 @@ mapping:                                     # optional -> search if absent
 constraints:
   budget: 2000
   seed: 0
-  objective: latency                         # latency | energy | edp | pareto
+  objective: latency                # latency | energy | edp | pareto | pareto3
   variants: [fused_dist, fused_std]
 """
 from __future__ import annotations

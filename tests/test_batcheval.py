@@ -65,6 +65,7 @@ def test_batch_matches_tree_path(wl_name, co, arch):
             assert bool(br.valid[i]) == r.valid
             assert br.latency[i] == pytest.approx(r.latency, rel=1e-9)
             assert br.energy_pj[i] == pytest.approx(r.energy_pj, rel=1e-9)
+            assert br.headroom[i] == pytest.approx(r.headroom, rel=1e-9)
 
 
 @pytest.mark.parametrize("wl_name,co", PRIME_WORKLOADS,
@@ -142,6 +143,26 @@ def test_grid_accepts_pr1_shaped_candidate_dicts():
     with pytest.raises(ValueError, match="bad schedule"):
         evaluate_specs_batch(co, arch, topo, [1], [1], [1],
                              schedule=["sequentail"])
+
+
+def test_rejected_topology_arrays_are_independent():
+    """Regression (satellite): the rejected-topology path used to alias
+    ONE zeros buffer across latency, energy and every breakdown key —
+    mutating any of them corrupted all of them."""
+    co = gemm_softmax(256, 1024, 64)
+    arch = edge()
+    bad = evaluate_specs_batch(co, arch, Topology(variant="fa"),
+                               [1, 2], [1, 1], [1, 1], track_breakdown=True)
+    assert not bad.valid.any()
+    bufs = [bad.latency, bad.energy_pj, bad.headroom,
+            *bad.lat_breakdown.values(), *bad.energy_breakdown.values()]
+    for i, a in enumerate(bufs):
+        for b in bufs[i + 1:]:
+            assert a is not b and not np.shares_memory(a, b)
+    bad.lat_breakdown["gemm"][0] = 123.0
+    assert bad.lat_breakdown["simd"][0] == 0.0
+    assert bad.latency[0] == 0.0
+    assert bad.energy_pj[0] == 0.0
 
 
 def test_spec_spatial_fanouts_reach_scalar_builder():
@@ -345,7 +366,7 @@ def test_spec_cache_hits_and_rejections():
     assert batcheval.cache_info()["spec"]["hits"] == h0 + 1
     assert r1 == r2
     ref = evaluate_mapping(co, arch, spec)
-    assert r1 == (ref.latency, ref.energy_pj, ref.valid)
+    assert r1 == (ref.latency, ref.energy_pj, ref.valid, ref.headroom)
     # rejected specs (scalar path raises) cache as None both times
     bad = MappingSpec(variant="fa")    # wrong builder family
     assert evaluate_cached(co, arch, bad) is None
@@ -381,6 +402,21 @@ def test_arch_signature_busts_caches():
     s2 = batcheval.cache_info()["spec"]
     assert s2["misses"] == s["misses"] + 1
     assert r1 != r2
+
+
+def test_arch_signature_memoized():
+    """Regression (satellite): Arch.signature() is on the hot cache-key
+    path — it must build the field tuple once per instance, and derived
+    instances (dataclasses.replace) must not inherit a stale memo."""
+    a = edge()
+    s1 = a.signature()
+    assert a.signature() is s1              # memoized object, not a rebuild
+    b = dataclasses.replace(
+        a, gb=dataclasses.replace(a.gb, bandwidth=a.gb.bandwidth * 2))
+    assert b.signature() != s1              # fresh instance, fresh memo
+    assert edge().signature() == s1         # equal params -> equal tuple
+    # the memo attribute never leaks into dataclass equality
+    assert a == edge()
 
 
 def test_co_signature_distinguishes_shapes():

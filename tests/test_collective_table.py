@@ -1,0 +1,396 @@
+"""Tests for the tabulated per-P collective cost factors, the divisor-
+complete candidate sets, the capacity-headroom channel and the 3-D Pareto
+machinery (plus their satellite bugfixes)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import batcheval, collectives
+from repro.core.batcheval import (ParetoArchive, Topology,
+                                  evaluate_specs_batch, pareto_merge3)
+from repro.core.collectives import (COLLECTIVE_TYPES, collective_cost,
+                                    noc_latency)
+from repro.core.hardware import NoCParams, cloud, edge, tpu_v5e
+from repro.core.ir import MappingSpec, evaluate_mapping
+from repro.core.search import (_search_randomized, candidate_specs, divisors,
+                               fanout_candidates, pow2_tilings, search)
+from repro.core.validate import capacity_headroom, validity_and_headroom
+from repro.core.workload import gemm_softmax
+
+PRESETS = [edge(), cloud(), tpu_v5e()]
+GIGA = 1e9
+
+
+# ---------------------------------------------------- tabulated collectives
+
+@pytest.mark.parametrize("arch", PRESETS, ids=[a.name for a in PRESETS])
+@pytest.mark.parametrize("col", COLLECTIVE_TYPES)
+def test_table_bitwise_matches_scalar(arch, col):
+    """Array-participant costs gathered from the factor table are
+    bit-identical to the scalar-P calls for EVERY participant count of
+    every preset NoC — including non-pow2 P (3/5/6, ...) and the (1,1)
+    degenerate core NoC of tpu_v5e."""
+    for noc in (arch.cluster_noc, arch.core_noc):
+        Ps = np.arange(0, noc.num_nodes + 1)
+        dv = 8191.375  # non-trivial mantissa
+        arr = collective_cost(col, dv, Ps, noc)
+        assert arr.volume_bytes.shape == Ps.shape
+        for j, p in enumerate(Ps):
+            sc = collective_cost(col, dv, int(p), noc)
+            assert arr.volume_bytes[j] == sc.volume_bytes, (noc.mesh, p)
+            assert arr.hops[j] == sc.hops
+            assert arr.steps[j] == sc.steps
+
+
+def test_table_bitwise_matches_scalar_array_dv():
+    """Parity also holds when the data volume is itself an array (the
+    batched engine passes per-grid-point volumes)."""
+    noc = edge().cluster_noc
+    P = np.array([1, 2, 3, 4, 4, 3])
+    dv = np.array([0.0, 1e3, 1e3, 512.5, 0.0, 77.25])
+    for col in COLLECTIVE_TYPES:
+        arr = collective_cost(col, dv, P, noc)
+        for j in range(P.size):
+            sc = collective_cost(col, float(dv[j]), int(P[j]), noc)
+            assert arr.volume_bytes[j] == sc.volume_bytes, (col, j)
+            if P[j] > 1 and dv[j] > 0:  # scalar short-circuits to 0 steps
+                assert arr.hops[j] == sc.hops
+                assert arr.steps[j] == sc.steps
+
+
+@pytest.mark.parametrize("p", [2, 3, 4, 5, 6, 7, 8, 13, 16])
+def test_non_pow2_volumes_not_rounded_up(p):
+    """Dissemination schedule: busiest-node volume is exactly (P-1)/P*DV
+    for every P — the old next-pow2 fallback overcharged non-pow2 P (e.g.
+    All-Gather at P=3 moved the full DV instead of 2/3)."""
+    noc = tpu_v5e().cluster_noc
+    dv = 3072.0
+    for col in ("AllGather", "ReduceScatter", "Gather", "Broadcast",
+                "AllToAll"):
+        c = collective_cost(col, dv, p, noc)
+        assert c.volume_bytes == pytest.approx(dv * (p - 1) / p, rel=1e-12)
+    ar = collective_cost("AllReduce", dv, p, noc)
+    rs = collective_cost("ReduceScatter", dv, p, noc)
+    ag = collective_cost("AllGather", dv, p, noc)
+    assert ar.volume_bytes == rs.volume_bytes + ag.volume_bytes
+    assert ar.hops == rs.hops + ag.hops
+    assert ar.steps == rs.steps + ag.steps
+
+
+def test_collective_zero_and_degenerate_cases():
+    noc = NoCParams((1, 1), 256, 64 * GIGA, 5e-9, 2e-9)  # degenerate mesh
+    assert collective_cost("AllReduce", 1024.0, 1, noc).volume_bytes == 0.0
+    assert collective_cost("AllReduce", 0.0, 4, noc).volume_bytes == 0.0
+    c = collective_cost("AllGather", 1024.0, 4, noc)
+    assert c.volume_bytes > 0 and c.hops >= 1  # distances floor at 1
+    with pytest.raises(ValueError, match="unknown collective"):
+        collective_cost("AllSwizzle", 1.0, 4, noc)
+    with pytest.raises(ValueError, match="unknown collective"):
+        collective_cost("AllSwizzle", 1.0, np.array([2, 4]), noc)
+    # negative/zero entries in a participant array cost nothing
+    arr = collective_cost("AllReduce", 1e3, np.array([-2, 0, 1, 2]), noc)
+    assert list(arr.volume_bytes[:3]) == [0.0, 0.0, 0.0]
+    assert arr.volume_bytes[3] > 0
+
+
+def test_mesh_scan_runs_once_per_noc(monkeypatch):
+    """Regression (satellite): repeated collective_cost calls must not
+    rescan the mesh — _mesh_avg_distance's O(nodes^2) manhattan sweep is
+    cached per NoCParams inside the factor table build."""
+    noc = NoCParams((7, 3), 256, 64 * GIGA, 5e-9, 2e-9)  # unique => cold
+    calls = {"n": 0}
+    orig = NoCParams.manhattan
+
+    def counting(self, a, b):
+        calls["n"] += 1
+        return orig(self, a, b)
+
+    monkeypatch.setattr(NoCParams, "manhattan", counting)
+    collectives.collective_cache_clear()
+    collective_cost("AllToAll", 1e6, 6, noc)
+    warm = calls["n"]
+    assert warm >= 21 * 20  # the one-off O(nodes^2) scan did happen
+    # same NoC, different P / type / volume: the table answers, no rescan
+    collective_cost("AllToAll", 1e6, 6, noc)
+    collective_cost("AllToAll", 2e6, 13, noc)
+    collective_cost("AllToAll", 5.0, np.arange(1, 22), noc)
+    assert calls["n"] == warm
+    # an equal-parameter NoCParams instance shares the cache line
+    clone = NoCParams((7, 3), 256, 64 * GIGA, 5e-9, 2e-9)
+    collective_cost("AllToAll", 1e6, 9, clone)
+    assert calls["n"] == warm
+
+
+def test_factor_tables_are_read_only():
+    noc = edge().cluster_noc
+    collective_cost("AllReduce", 1.0, 4, noc)
+    tbl = collectives._FACTOR_TABLES[(noc, "AllReduce")]
+    with pytest.raises(ValueError):
+        tbl.volume_factor[2] = 99.0
+    # noc_latency semantics unchanged by the table path
+    c = collective_cost("AllReduce", 4096.0, 4, noc)
+    assert noc_latency(c, noc) == pytest.approx(
+        noc.t_router * c.hops + noc.t_enq * c.volume_bytes / noc.channel_width)
+
+
+# ------------------------------------------------ divisor-complete fanouts
+
+def test_divisors_helper():
+    assert divisors(1) == [1]
+    assert divisors(16) == [1, 2, 4, 8, 16]
+    assert divisors(768, cap=4) == [1, 2, 3, 4]
+    assert divisors(360, cap=20) == [1, 2, 3, 4, 5, 6, 8, 9, 10, 12, 15, 18,
+                                     20]
+    assert divisors(97) == [1, 97]  # prime
+
+
+def test_fanout_candidates_superset_of_pow2():
+    for n in (1, 4, 6, 16, 256):
+        fc = fanout_candidates(n, (768, 97))
+        assert set(pow2_tilings(n)) <= set(fc)
+        assert all(1 <= d <= max(n, 1) for d in fc)
+    # N=768 on a 4-cluster mesh: the 3-way unrolling appears
+    assert 3 in fanout_candidates(4, (768,))
+
+
+def test_candidate_specs_divisor_axes():
+    co = gemm_softmax(384, 768, 96)
+    arch = edge()
+    div = candidate_specs(co, arch)
+    p2 = candidate_specs(co, arch, fanouts="pow2")
+    assert set(p2["sp_cluster"]) <= set(div["sp_cluster"])
+    assert 3 in div["sp_cluster"] and 3 not in p2["sp_cluster"]
+    with pytest.raises(ValueError, match="unknown fanouts"):
+        candidate_specs(co, arch, fanouts="all")
+    dt = candidate_specs(co, arch, divisor_tilings=True)
+    assert 3 in dt["m_tiles"] and 3 in dt["k_tiles"]
+    assert set(div["m_tiles"]) <= set(dt["m_tiles"])
+
+
+def test_divisor_search_no_worse_than_pow2():
+    """Superset candidate sets can only improve the exhaustive optimum —
+    the BENCH_search schema-v3 gate, spot-checked here on a non-pow2 dim
+    where the divisor axes genuinely add fanouts."""
+    co = gemm_softmax(384, 768, 96)
+    arch = edge()
+    rd = search(co, arch)                    # divisors (default)
+    rp = search(co, arch, fanouts="pow2")
+    assert rd.mode == rp.mode == "exhaustive"
+    assert rd.latency <= rp.latency * (1 + 1e-12)
+    # the divisor grid actually contains the 3-way point, evaluated valid
+    cands = candidate_specs(co, arch)
+    topo = batcheval.enumerate_topologies(co, cands)[0]
+    br = batcheval.evaluate_topology_grid(co, arch, topo, cands)
+    assert (br.sp_cluster == 3).any()
+
+
+def test_nonpow2_fanout_matches_scalar_tree():
+    """Grid points at sp_cluster=3 agree with the per-spec tree path
+    (collective participants = 3 go through the tabulated factors)."""
+    co = gemm_softmax(384, 768, 96)
+    arch = edge()
+    spec = MappingSpec(variant="fused_dist", m_tiles=4, k_tiles=2,
+                       sp_cluster=3, sp_core=2)
+    r = evaluate_mapping(co, arch, spec)
+    br = evaluate_specs_batch(co, arch, Topology(variant="fused_dist"),
+                              [4], [2], [1], sp_cluster=[3], sp_core=[2])
+    assert br.latency[0] == pytest.approx(r.latency, rel=1e-12)
+    assert br.energy_pj[0] == pytest.approx(r.energy_pj, rel=1e-12)
+    assert bool(br.valid[0]) == r.valid
+
+
+# ------------------------------------------------------- headroom channel
+
+def test_headroom_matches_scalar_and_bounds():
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    br = evaluate_specs_batch(co, arch, Topology(variant="fused_dist"),
+                              [1, 4, 64], [1, 2, 2], [1, 1, 1])
+    assert br.headroom is not None and br.headroom.shape == br.latency.shape
+    for i in range(br.size):
+        r = evaluate_mapping(co, arch, br.spec_at(i))
+        assert br.headroom[i] == pytest.approx(r.headroom, rel=1e-12)
+        assert r.headroom == pytest.approx(
+            capacity_headroom(r.root, arch, r.tiling, co.tensors))
+    # valid grid points never overflow: headroom >= 0 wherever valid
+    assert (br.headroom[br.valid] >= 0).all()
+    assert (br.headroom <= 1.0).all()
+
+
+def test_validity_and_headroom_consistent():
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    spec = MappingSpec(variant="fused_dist", m_tiles=np.array([1, 8, 512]),
+                       k_tiles=np.array([1, 2, 2]))
+    from repro.core.ir import build_tree
+    root, tiling = build_tree(co, arch, spec)
+    ok, hr = validity_and_headroom(root, arch, tiling, co.tensors)
+    from repro.core.validate import validity_mask
+    assert np.array_equal(validity_mask(root, arch, tiling, co.tensors), ok)
+    # capacity-overflow points have negative headroom
+    assert ((hr >= 0) | ~ok).all()
+
+
+# ------------------------------------------------------- 3-D Pareto front
+
+def _brute_force_front3(pts):
+    """O(n^2) reference: indices of points not weakly dominated by any
+    distinct point (minimize all three columns)."""
+    keep = []
+    for i, p in enumerate(pts):
+        dominated = False
+        for j, q in enumerate(pts):
+            if j == i:
+                continue
+            if all(qc <= pc for qc, pc in zip(q, p)) and (
+                    any(qc < pc for qc, pc in zip(q, p)) or j < i):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(i)
+    return keep
+
+
+def test_pareto_front3_matches_bruteforce_random():
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        n = int(rng.integers(1, 60))
+        pts = rng.random((n, 3))
+        if trial % 3 == 0:   # inject duplicates / ties
+            pts = np.round(pts, 1)
+        merged = pareto_merge3(
+            [(p[0], p[1], -p[2], i) for i, p in enumerate(pts)])
+        got = sorted(m[3] for m in merged)
+        want = sorted(_brute_force_front3(pts.tolist()))
+        assert got == want, trial
+        # no member of the returned front dominates another
+        for a in merged:
+            for b in merged:
+                if a is b:
+                    continue
+                assert not (a[0] <= b[0] and a[1] <= b[1] and a[2] >= b[2])
+
+
+def test_pareto_front3_on_real_grid():
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    cands = candidate_specs(co, arch)
+    topo = batcheval.enumerate_topologies(co, cands)[0]
+    br = batcheval.evaluate_topology_grid(co, arch, topo, cands)
+    f3 = br.pareto_front3()
+    assert f3.size > 0
+    lat, en, hr, valid = br.latency, br.energy_pj, br.headroom, br.valid
+    # ascending latency; all valid; none dominated by any valid point
+    assert (np.diff(lat[f3]) >= 0).all()
+    for i in f3:
+        assert valid[i]
+        dominated = ((lat <= lat[i]) & (en <= en[i]) & (hr >= hr[i]) & valid
+                     & ((lat < lat[i]) | (en < en[i]) | (hr > hr[i])))
+        assert not dominated.any(), i
+    # the 2-D front's points all appear in (or are matched by) the 3-D
+    # front's latency/energy projection, and fronts only grow in 3-D
+    assert f3.size >= br.pareto_front().size
+    # min-latency point matches the scalar optimum
+    assert lat[f3].min() == lat[br.best_index("latency")]
+
+
+def test_search_pareto3_objective():
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    lat = search(co, arch, objective="latency")
+    pf3 = search(co, arch, objective="pareto3")
+    assert pf3.mode == "exhaustive" and pf3.front
+    assert len(pf3.front[0]) == 4          # (lat, en, headroom, spec)
+    assert pf3.front[0][0] == pytest.approx(lat.latency, rel=1e-12)
+    assert pf3.latency == pytest.approx(pf3.front[0][0], rel=1e-12)
+    assert all(0.0 <= p[2] <= 1.0 for p in pf3.front)
+    assert pf3.best.valid
+    # randomized fallback fills a (bounded, non-dominated) front too
+    rd = search(co, arch, mode="randomized", budget=300, seed=0,
+                objective="pareto3")
+    assert rd.front
+    for a in rd.front:
+        for b in rd.front:
+            if a is not b:
+                assert not (a[0] <= b[0] and a[1] <= b[1] and a[2] >= b[2])
+
+
+def test_pareto_archive_bounded_and_non_dominated():
+    rng = np.random.default_rng(0)
+    arc = ParetoArchive(dims=3, maxlen=16)
+    # anti-correlated objectives => a large true front that must be thinned
+    for _ in range(3000):
+        x = float(rng.random())
+        y = 1.0 - x + 0.01 * float(rng.random())
+        h = float(rng.random())
+        arc.add((x, y, h, None))
+        assert len(arc) <= 2 * 16  # never grows unboundedly
+    front = arc.front()
+    assert 2 <= len(front) <= 2 * 16
+    assert all(a[0] <= b[0] for a, b in zip(front, front[1:]))
+    for a in front:
+        for b in front:
+            if a is not b:
+                assert not (a[0] <= b[0] and a[1] <= b[1] and a[2] >= b[2])
+    # 2-D archive: duplicates rejected, dominated evicted
+    arc2 = ParetoArchive(dims=2, maxlen=8)
+    assert arc2.add((1.0, 1.0, "a"))
+    assert not arc2.add((1.0, 1.0, "dup"))
+    assert arc2.add((0.5, 0.5, "dominator"))
+    assert [p[2] for p in arc2.front()] == ["dominator"]
+    with pytest.raises(ValueError):
+        ParetoArchive(dims=4)
+
+
+# -------------------------------------------- randomized-search satellites
+
+def test_randomized_history_logs_objective_score():
+    """Regression (satellite): convergence history must log the OBJECTIVE
+    score — an energy search used to log latency, producing misleading
+    convergence curves."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    rd = search(co, arch, mode="randomized", budget=400, seed=3,
+                objective="energy")
+    assert rd.history
+    scores = [s for _, s in rd.history]
+    assert scores == sorted(scores, reverse=True)   # monotone improvement
+    assert scores[-1] == pytest.approx(rd.best.energy_pj, rel=1e-12)
+    # latency at the energy-best spec differs from its energy => the old
+    # (iter, latency) logging cannot produce this final entry
+    assert rd.best.latency != pytest.approx(rd.best.energy_pj)
+
+
+def test_randomized_resamples_duplicates():
+    """Regression (satellite): duplicate samples used to burn budget
+    iterations; now one iteration resamples (bounded) until it finds an
+    unseen spec, so a small budget evaluates ~budget unique specs even in
+    a collision-heavy space."""
+    co = gemm_softmax(64, 128, 64)
+    arch = edge()
+    cands = {
+        "variant": ["fused_dist"],
+        "m_tiles": [1, 2, 4, 8, 16, 32, 64],
+        "k_tiles": [1, 2, 4, 8],
+        "n_tiles": [1],
+        "sp_cluster": [1, 2, 4],
+        "sp_core": [1, 2],
+        "schedule": ["sequential", "pipelined"],
+        "collective_gran": ["tile"],
+        "loop_order_gb": [("M", "N")],
+    }
+    space = 7 * 4 * 3 * 2 * 2  # 336 unique specs
+    budget = 60
+    # hillclimb_frac=0 keeps every iteration in the full-space sampling
+    # phase, where a fresh spec is always reachable; without resampling
+    # the expected unique count at budget=60 over 336 specs is ~55 and
+    # shrinks every run the moment duplicates land
+    r = _search_randomized(co, arch, cands, budget=budget, seed=0,
+                           objective="latency", hillclimb_frac=0.0)
+    assert r.evaluated == budget < space
+    # with hill-climbing the tiny mutation neighborhood saturates — the
+    # bounded retry must concede those iterations, not spin forever
+    r2 = _search_randomized(co, arch, cands, budget=budget, seed=0,
+                            objective="latency", hillclimb_frac=0.5)
+    assert 0 < r2.evaluated <= budget

@@ -45,7 +45,7 @@ def test_cost_model_invariants(M, N, K, m_tiles, k_tiles, wl, variant, gran,
 
 @settings(max_examples=60, deadline=None)
 @given(dv=st.floats(min_value=1.0, max_value=1e9),
-       p=st.sampled_from([2, 4, 8, 16, 64, 256]),
+       p=st.sampled_from([2, 3, 4, 5, 6, 8, 16, 64, 256]),
        col=st.sampled_from(["AllReduce", "AllGather", "ReduceScatter",
                             "Gather", "Broadcast", "AllToAll"]))
 def test_collective_cost_properties(dv, p, col):
@@ -58,6 +58,60 @@ def test_collective_cost_properties(dv, p, col):
         2 * c1.volume_bytes, rel=1e-9)
     assert c1.hops >= 1
     assert c1.volume_bytes < dv * 2 + 1e-6  # never exceeds 2*DV (AR bound)
+
+
+@settings(max_examples=60, deadline=None)
+@given(dv=st.floats(min_value=0.0, max_value=1e9),
+       ps=st.lists(st.integers(min_value=1, max_value=256), min_size=1,
+                   max_size=16),
+       col=st.sampled_from(["AllReduce", "AllGather", "ReduceScatter",
+                            "Gather", "Broadcast", "AllToAll"]),
+       arch_fn=st.sampled_from([edge, cloud]),
+       noc_name=st.sampled_from(["cluster_noc", "core_noc"]))
+def test_tabulated_collective_bitwise_parity(dv, ps, col, arch_fn, noc_name):
+    """The tabulated array path is bit-identical (==, not approx) to the
+    scalar-P formulas for arbitrary participant mixes on the preset NoCs,
+    including non-pow2 P and the degenerate (1,1) core NoC of tpu_v5e."""
+    import numpy as np
+    from repro.core.hardware import tpu_v5e
+    noc = getattr(arch_fn(), noc_name)
+    for n in (noc, tpu_v5e().core_noc):
+        P = np.asarray(ps)
+        arr = collective_cost(col, dv, P, n)
+        for j, p in enumerate(ps):
+            sc = collective_cost(col, dv, p, n)
+            assert arr.volume_bytes[j] == sc.volume_bytes
+            if p > 1 and dv > 0:   # scalar short-circuits steps/hops to 0
+                assert arr.hops[j] == sc.hops
+                assert arr.steps[j] == sc.steps
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(min_value=1, max_value=50), seed=st.integers(0, 2**31),
+       rounding=st.sampled_from([None, 1, 2]))
+def test_pareto3_front_dominated_free(n, seed, rounding):
+    """pareto_merge3 fronts stay mutually non-dominated (and complete
+    w.r.t. an O(n^2) check) under random point clouds, with and without
+    duplicated/tied coordinates."""
+    import numpy as np
+    from repro.core.batcheval import pareto_merge3
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 3))
+    if rounding is not None:
+        pts = np.round(pts, rounding)   # force ties and duplicates
+    front = pareto_merge3([(p[0], p[1], p[2], i) for i, p in enumerate(pts)])
+    assert front
+    ids = {f[3] for f in front}
+    for a in front:
+        for b in front:
+            if a is not b:
+                assert not (a[0] <= b[0] and a[1] <= b[1] and a[2] >= b[2])
+    # completeness: every excluded point is weakly dominated by the front
+    for i, p in enumerate(pts):
+        if i in ids:
+            continue
+        assert any(f[0] <= p[0] and f[1] <= p[1] and f[2] >= p[2]
+                   for f in front), i
 
 
 @settings(max_examples=50, deadline=None)
