@@ -31,9 +31,19 @@ ATTN_CLOUD = [(1024, 512, 1024, 512), (1, 128, 16384, 128),
 
 BUDGET = 250
 
+# Full paper-table search axes (PR 4): the m/k/n temporal tilings are
+# divisor-extended on top of the divisor-complete spatial fanouts.  The
+# exhaustive limit was re-budgeted (EXHAUSTIVE_LIMIT 64k -> 128k) so
+# every paper-table cell — including the non-pow2 provisioning GEMMs on
+# cloud, whose spaces reach ~117k points — still enumerates exhaustively
+# instead of falling back to sampling.  Sweeps fan out through
+# ``search_many``'s default executor, i.e. the shared-memory process
+# pool for table-sized job counts.
+SEARCH_KW = {"divisor_tilings": True}
+
 # Non-pow2 provisioning showcase shapes (M, N, K with 3*2^k factors): the
 # divisor-complete fanout axes add 3/6-way unrollings the pow2 sets never
-# enumerate.  Shared with benchmarks/search_throughput.py (schema-v3
+# enumerate.  Shared with benchmarks/search_throughput.py (schema-v4
 # provisioning gates).
 PROVISIONING_GEMMS = [(384, 768, 96), (768, 1536, 192)]
 
@@ -56,7 +66,7 @@ def fusion_comparison(workload_fn, label: str, paper_claim: float) -> Dict:
     t0 = time.time()
     grids = ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud()))
     jobs = [(workload_fn(M, N, K), arch,
-             {"budget": BUDGET, "seed": 1, "variants": [v]})
+             dict(SEARCH_KW, budget=BUDGET, seed=1, variants=[v]))
             for shapes, arch in grids
             for (M, N, K) in shapes
             for v in VARIANTS]
@@ -92,11 +102,11 @@ def attention_variants() -> Dict:
         for (M, K, N, L) in shapes:
             jobs += [
                 (attention(M, K, N, L), arch,
-                 {"budget": BUDGET, "seed": 1, "variants": ["ua"]}),
+                 dict(SEARCH_KW, budget=BUDGET, seed=1, variants=["ua"])),
                 (attention(M, K, N, L), arch,
-                 {"budget": BUDGET, "seed": 1, "variants": ["pfa"]}),
+                 dict(SEARCH_KW, budget=BUDGET, seed=1, variants=["pfa"])),
                 (flash_attention(M, K, N, L), arch,
-                 {"budget": BUDGET, "seed": 1, "variants": ["fa"]}),
+                 dict(SEARCH_KW, budget=BUDGET, seed=1, variants=["fa"])),
             ]
     results = iter(search_many(jobs))
     for shapes, arch in grids:
@@ -145,7 +155,7 @@ def pareto_fronts() -> Dict:
     (shape, arch) gemm_softmax space, extracted vectorized from the SoA
     grids (``objective='pareto'``).  Prints front size and both endpoints;
     the front's min latency always matches the scalar-latency optimum."""
-    jobs = [(gemm_softmax(M, N, K), arch, {"objective": "pareto"})
+    jobs = [(gemm_softmax(M, N, K), arch, dict(SEARCH_KW, objective="pareto"))
             for shapes, arch in ((GEMMS_EDGE, edge()), (GEMMS_CLOUD, cloud()))
             for (M, N, K) in shapes]
     results = iter(search_many(jobs))
@@ -180,7 +190,8 @@ def provisioning_fronts() -> Dict:
     cells += [(gemm_softmax(*shape), arch)
               for shape in PROVISIONING_GEMMS
               for arch in (edge(), cloud())]
-    results = iter(search_many([(co, arch, {"objective": "pareto3"})
+    results = iter(search_many([(co, arch,
+                                 dict(SEARCH_KW, objective="pareto3"))
                                 for co, arch in cells]))
     sizes, knees = [], []
     for i, (co, arch) in enumerate(cells):

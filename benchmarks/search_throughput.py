@@ -14,7 +14,8 @@ maximum, as in the PR 1 engine — the mappings/sec floor guards against
 regressions there) and on the **full grid** (divisor-complete sp_cluster
 x sp_core x schedule folded into the SoA pass), plus a non-pow2-dims
 space where the divisor fanout axes genuinely widen the grid.  It also
-cross-checks, on every (workload, arch) pair of ``paper_tables.py``, that
+cross-checks, on every (workload, arch) pair of ``paper_tables.py``
+(now with the divisor-extended temporal tilings enabled), that
 
 * exhaustive search returns latency <= the seed randomized search,
 * the Pareto front's best latency <= the scalar-latency optimum (the
@@ -24,13 +25,27 @@ cross-checks, on every (workload, arch) pair of ``paper_tables.py``, that
 * the 3-D provisioning front (``objective='pareto3'``) also contains the
   latency optimum.
 
-Emits ``BENCH_search.json`` (schema comet/search_throughput/v3, see
+The **executor sweep** (schema v4, the shared-memory process-pool
+tentpole gates) runs the 48-pair divisor-tiling paper-table sweep
+through ``search_many`` with ``executor='serial' | 'thread' |
+'process'`` and asserts that
+
+* process-pool sweep throughput >= thread-pool throughput (the process
+  path ships grids through shared memory instead of pickling them and
+  bypasses the GIL, so it must not lose to threads),
+* every pair's best mapping is **bit-identical** across the three
+  executors (same spec, same latency/energy floats, same evaluated
+  count), and
+* no shared-memory segment outlives the sweep (clean lifecycle).
+
+Emits ``BENCH_search.json`` (schema comet/search_throughput/v4, see
 benchmarks/README.md) and prints ``name,us_per_call,derived`` CSV rows.
 Exits non-zero if the speedup floor or any invariant is violated.
 """
 from __future__ import annotations
 
 import json
+import os
 import random
 import sys
 import time
@@ -40,7 +55,8 @@ from repro.core import batcheval
 from repro.core.batcheval import enumerate_topologies, evaluate_topology_grid
 from repro.core.hardware import cloud, edge
 from repro.core.ir import evaluate_mapping
-from repro.core.search import candidate_specs, search, _sample
+from repro.core.search import (candidate_specs, search, search_many,
+                               _sample)
 from repro.core.workload import attention, flash_attention, gemm_softmax
 
 SPEEDUP_FLOOR = 20.0
@@ -145,16 +161,29 @@ def search_invariants() -> List[Dict]:
     must return latency <= the seed's randomized search result, the
     Pareto fronts (2-D and 3-D) must be superset-quality (best-latency
     point <= the scalar-latency optimum), and the divisor-complete
-    candidate axes must never lose to the pow2-only axes they contain."""
-    from benchmarks.paper_tables import BUDGET
+    candidate axes must never lose to the pow2-only axes they contain.
+    The exhaustive/front searches run on the full paper-table axes
+    (``divisor_tilings=True``, PR 4) and the whole 5-searches-per-pair
+    matrix fans out through ``search_many`` — pair-major job order keeps
+    a pair's grid-sharing searches in the same process-pool chunk, so
+    per-worker caches serve the front searches."""
+    from benchmarks.paper_tables import BUDGET, SEARCH_KW
 
+    pairs = _paper_pairs()
+    per_pair = [
+        dict(SEARCH_KW, mode="exhaustive"),
+        {"mode": "exhaustive", "fanouts": "pow2"},
+        {"mode": "randomized", "budget": BUDGET, "seed": 1},
+        dict(SEARCH_KW, mode="exhaustive", objective="pareto"),
+        dict(SEARCH_KW, mode="exhaustive", objective="pareto3"),
+    ]
+    jobs = [(co, arch, kw)
+            for _name, co, arch in pairs
+            for kw in per_pair]
+    results = iter(search_many(jobs))
     out = []
-    for name, co, arch in _paper_pairs():
-        ex = search(co, arch, mode="exhaustive")
-        ex_pow2 = search(co, arch, mode="exhaustive", fanouts="pow2")
-        rd = search(co, arch, mode="randomized", budget=BUDGET, seed=1)
-        pf = search(co, arch, mode="exhaustive", objective="pareto")
-        pf3 = search(co, arch, mode="exhaustive", objective="pareto3")
+    for name, co, arch in pairs:
+        ex, ex_pow2, rd, pf, pf3 = (next(results) for _ in range(5))
         out.append({
             "workload": name,
             "dims": dict(co.dim_sizes),
@@ -183,16 +212,17 @@ def provisioning_study() -> Dict:
     with 3*2^k factors, so the divisor fanout axes add 3/6-way unrollings
     the pow2 sets never enumerate): front sizes, the headroom span and
     the divisor-vs-pow2 gate on each (shape, arch)."""
-    from benchmarks.paper_tables import PROVISIONING_GEMMS
+    from benchmarks.paper_tables import PROVISIONING_GEMMS, SEARCH_KW
 
     rows = []
     for i, shape in enumerate(PROVISIONING_GEMMS):
         name = f"gemm_softmax_np2_{i}"
         for arch in (edge(), cloud()):
             co = gemm_softmax(*shape)
-            ex = search(co, arch, mode="exhaustive")
+            ex = search(co, arch, mode="exhaustive", **SEARCH_KW)
             ex_pow2 = search(co, arch, mode="exhaustive", fanouts="pow2")
-            pf3 = search(co, arch, mode="exhaustive", objective="pareto3")
+            pf3 = search(co, arch, mode="exhaustive", objective="pareto3",
+                         **SEARCH_KW)
             hr = [p[2] for p in pf3.front]
             row = {
                 "workload": name,
@@ -219,6 +249,70 @@ def provisioning_study() -> Dict:
     return {"pairs": rows, "ok": ok}
 
 
+def executor_sweep(repeats: int = 2) -> Dict:
+    """Schema-v4 tentpole gates: the full 48-pair paper-table sweep
+    (``divisor_tilings=True``) through each ``search_many`` executor.
+
+    * ``process`` jobs/sec must be >= ``thread`` jobs/sec: the process
+      path bypasses the GIL and ships grids through shared-memory
+      segments instead of pickling BatchResults, so losing to threads
+      would mean the transport regressed.  (``serial`` is reported for
+      context; on a sweep this small, pool overhead can make it the
+      fastest of the three — the process path exists for the multi-
+      minute divisor-tiling sweeps, where per-worker scaling wins.)
+    * The best mapping of every pair must be **bit-identical** across
+      serial/thread/process (spec, latency, energy, evaluated count).
+    * No shared-memory segment may survive the sweep.
+    """
+    from benchmarks.paper_tables import SEARCH_KW
+
+    jobs = [(co, arch, dict(SEARCH_KW)) for _n, co, arch in _paper_pairs()]
+    shm_dir = "/dev/shm"
+    before = set(os.listdir(shm_dir)) if os.path.isdir(shm_dir) else None
+    times: Dict[str, float] = {}
+    results: Dict[str, List] = {}
+    for ex in ("serial", "thread", "process"):
+        for _ in range(repeats):
+            batcheval.cache_clear()
+            t0 = time.perf_counter()
+            rs = search_many(jobs, executor=ex)
+            dt = time.perf_counter() - t0
+            if ex not in times or dt < times[ex]:
+                times[ex] = dt
+                results[ex] = rs
+    leaked = []
+    if before is not None:
+        leaked = sorted(n for n in set(os.listdir(shm_dir)) - before
+                        if n.startswith("cm"))
+    mismatched = []
+    for i, (rs, rt, rp) in enumerate(zip(results["serial"],
+                                         results["thread"],
+                                         results["process"])):
+        if not (rs.latency == rt.latency == rp.latency
+                and rs.energy_pj == rt.energy_pj == rp.energy_pj
+                and rs.best.spec == rt.best.spec == rp.best.spec
+                and rs.evaluated == rt.evaluated == rp.evaluated):
+            mismatched.append(i)
+    jps = {ex: len(jobs) / t for ex, t in times.items()}
+    ok = (jps["process"] >= jps["thread"] and not mismatched and not leaked)
+    for ex in ("serial", "thread", "process"):
+        print(f"executor_sweep_{ex},{times[ex]*1e6/len(jobs):.0f},"
+              f"jobs_per_sec={jps[ex]:.1f}")
+    print(f"executor_sweep_ok,0,{ok};process_vs_thread="
+          f"{jps['process']/jps['thread']:.2f}x;"
+          f"bit_identical={not mismatched};leaked={len(leaked)}")
+    return {
+        "pairs": len(jobs),
+        "seconds": times,
+        "jobs_per_sec": jps,
+        "process_vs_thread": jps["process"] / jps["thread"],
+        "bit_identical": not mismatched,
+        "mismatched_jobs": mismatched,
+        "leaked_segments": leaked,
+        "ok": ok,
+    }
+
+
 def run_all(out_path: str = "BENCH_search.json") -> Dict:
     from benchmarks.paper_tables import PROVISIONING_GEMMS
 
@@ -238,15 +332,18 @@ def run_all(out_path: str = "BENCH_search.json") -> Dict:
     ]
     pairs = search_invariants()
     prov = provisioning_study()
+    executors = executor_sweep()
     result = {
-        "schema": "comet/search_throughput/v3",
+        "schema": "comet/search_throughput/v4",
         "speedup_floor": SPEEDUP_FLOOR,
         "spaces": spaces,
         "exhaustive_vs_randomized": pairs,
         "provisioning": prov,
+        "executors": executors,
         "ok": (all(s["speedup"] >= SPEEDUP_FLOOR for s in spaces)
                and all(p["ok"] for p in pairs)
-               and prov["ok"]),
+               and prov["ok"]
+               and executors["ok"]),
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)

@@ -48,6 +48,20 @@ Cache keys use the *full architecture parameter signature*
 two Arch instances sharing a name but differing in bandwidth/capacity
 must not reuse each other's results.  Both caches are shared across
 searches (see :func:`repro.core.search.search` and ``search_many``).
+
+**Executor contract.**  The caches and every evaluation entry point here
+are executor-agnostic: ``search_many`` may run them in the calling
+thread (``'serial'``), in a thread pool sharing this module's caches
+(``'thread'``), or in process-pool workers that each hold their own
+module-level cache instance (``'process'``) — the numbers are
+bit-identical either way because the same code evaluates the same grids.
+For the process path, :func:`batch_to_shm` serializes a
+:class:`BatchResult`'s arrays into one ``multiprocessing.shared_memory``
+segment and returns a tiny picklable :class:`ShmBatchRef`;
+:func:`batch_from_shm` reattaches the arrays zero-copy in the parent.
+Segments are created by workers and unlinked by the consumer, with
+``repro.core.search.cleanup_shm_segments`` as the crash backstop — see
+the lifecycle notes on :class:`ShmBatchRef`.
 """
 from __future__ import annotations
 
@@ -62,13 +76,17 @@ from .cost import ENERGY_KEYS, LAT_KEYS, CostModel
 from .hardware import Arch
 from .ir import MappingSpec, build_tree
 from .mapping import SCHEDULES
-from .validate import validity_and_headroom
+from .validate import validity_headroom_levels
 from .workload import CompoundOp
 
 __all__ = [
     "Topology",
     "BatchResult",
     "ParetoArchive",
+    "ShmBatchRef",
+    "batch_to_shm",
+    "batch_from_shm",
+    "shm_unlink",
     "co_signature",
     "numeric_axes",
     "enumerate_topologies",
@@ -129,6 +147,11 @@ class BatchResult:
     # Worst relative buffer slack per grid point (the 'pareto3' channel);
     # negative where some buffer overflows.
     headroom: Optional[np.ndarray] = None
+    # Per-level slack arrays ({'GB': ..., 'OB': ...}, same shape):
+    # ``headroom`` folded per memory level instead of across all levels,
+    # so provisioning studies can size the cluster (GB) and core (OB =
+    # IB+WB+OB) buffers independently.  None for rejected topologies.
+    headroom_levels: Optional[Dict[str, np.ndarray]] = None
     # Per-key breakdown arrays (same shape), present only when the batch
     # was evaluated with track_breakdown=True.
     lat_breakdown: Optional[Dict[str, np.ndarray]] = None
@@ -266,6 +289,26 @@ def pareto_merge3(points: Sequence[Tuple]) -> List[Tuple]:
     return [points[j] for j in _pareto3_sorted_indices(a, b, c)]
 
 
+def _crowding_distances(keys: np.ndarray) -> np.ndarray:
+    """NSGA-II crowding distance per point of an (n, dims) objective
+    matrix (all objectives minimized): for each objective, the span-
+    normalized gap between a point's two neighbours in that objective's
+    ordering, summed over objectives.  Per-objective extreme points get
+    +inf so boundary points are never pruned; a degenerate objective
+    (zero span) contributes nothing."""
+    n, dims = keys.shape
+    dist = np.zeros(n)
+    for j in range(dims):
+        order = np.argsort(keys[:, j], kind="stable")
+        col = keys[order, j]
+        span = float(col[-1] - col[0])
+        dist[order[0]] = np.inf
+        dist[order[-1]] = np.inf
+        if span > 0.0 and n > 2:
+            dist[order[1:-1]] += (col[2:] - col[:-2]) / span
+    return dist
+
+
 class ParetoArchive:
     """Bounded online non-dominated archive (ROADMAP: the randomized
     multi-objective fallback must not hold every valid sample once budgets
@@ -276,12 +319,17 @@ class ParetoArchive:
     (latency/energy minimized, headroom maximized).  ``add`` rejects
     points weakly dominated by the archive and evicts points the newcomer
     dominates, so the archive is mutually non-dominated at all times.
-    When it outgrows ``maxlen`` it is thinned to every other point along
-    the latency ordering (both endpoints survive).  Thinning bounds
-    memory at the cost of front *fidelity*: once points have been
-    evicted, a later sample that only an evicted point dominated can be
-    re-admitted, so the final front is an approximation of the true front
-    over all evaluated samples — though always mutually non-dominated.
+    When it outgrows ``maxlen`` it is thinned by **crowding-distance
+    pruning** (NSGA-II style): the per-objective extreme points always
+    survive and the most-crowded interior points — the ones whose
+    neighbours along every objective sit closest — are dropped first, so
+    a dense cluster loses points before a sparse stretch of the front
+    does.  (The previous every-other-point decimation kept clusters dense
+    and halved sparse regions instead.)  Thinning bounds memory at the
+    cost of front *fidelity*: once points have been evicted, a later
+    sample that only an evicted point dominated can be re-admitted, so
+    the final front is an approximation of the true front over all
+    evaluated samples — though always mutually non-dominated.
     """
 
     def __init__(self, dims: int = 2, maxlen: int = 512):
@@ -320,15 +368,173 @@ class ParetoArchive:
         return True
 
     def _thin(self) -> None:
+        """Crowding-distance pruning down to ``maxlen // 2`` points (the
+        same amortization ratio as the old decimation, so ``add`` still
+        thins at most once per ~maxlen/2 insertions).  Points are removed
+        one at a time — always a currently lowest-crowding interior point
+        — and distances are recomputed after each removal, so pruning one
+        of two tight neighbours immediately un-crowds the other."""
         pts = sorted(self._points, key=self._key)
-        kept = pts[::2]
-        if kept[-1] is not pts[-1]:
-            kept.append(pts[-1])                # keep the far endpoint
-        self._points = kept
+        target = max(2, self.maxlen // 2)
+        keys = np.asarray([self._key(p) for p in pts], dtype=np.float64)
+        alive = list(range(len(pts)))
+        while len(alive) > target:
+            d = _crowding_distances(keys[alive])
+            if np.isfinite(d).any():
+                alive.pop(int(np.argmin(d)))
+            else:
+                # every survivor is extreme in some objective — drop from
+                # the middle rather than eat into a front endpoint
+                alive.pop(len(alive) // 2)
+        self._points = [pts[i] for i in alive]
 
     def front(self) -> List[Tuple]:
         """The archived non-dominated points in ascending-latency order."""
         return sorted(self._points, key=self._key)
+
+
+# ------------------------------------------------- shared-memory transport
+
+# BatchResult array fields shipped through a segment, in declaration order.
+# Dict-valued channels (headroom_levels / breakdowns) are flattened to
+# dotted keys ("hl.GB", "lb.gemm", "eb.dram", ...).
+_SHM_FIELDS = ("m_tiles", "k_tiles", "n_tiles", "sp_cluster", "sp_core",
+               "schedule", "latency", "energy_pj", "valid", "headroom")
+_SHM_ALIGN = 64      # cache-line alignment for each array's offset
+
+
+@dataclass(frozen=True)
+class ShmBatchRef:
+    """Picklable reference to a :class:`BatchResult` serialized into one
+    ``multiprocessing.shared_memory`` segment.
+
+    The ref itself is tiny (segment name, topology, and per-array
+    (key, offset, dtype, shape) descriptors): it crosses the process
+    boundary through the ordinary pickle channel while the grid arrays
+    stay in the segment, so the parent reattaches them **zero-copy** with
+    :func:`batch_from_shm` instead of unpickling megabytes per result.
+
+    Lifecycle contract: the creating process (a pool worker) writes the
+    arrays, closes its mapping and returns the ref; the consuming process
+    (the sweep parent) attaches, reduces, then **unlinks** the segment.
+    Create-in-worker / unlink-in-parent is tracker-clean on every
+    multiprocessing start method: pool workers inherit the parent's
+    resource-tracker fd (``multiprocessing.spawn`` passes ``tracker_fd``
+    in the preparation data, fork inherits it outright), so register and
+    unregister land in the same tracker and no "leaked shared_memory"
+    warning fires at pool shutdown.  A segment whose ref is lost (worker
+    crash mid-job) is reclaimed by the sweep driver's prefix sweep — see
+    ``repro.core.search.cleanup_shm_segments``.
+    """
+
+    shm_name: str
+    nbytes: int
+    topo: Topology
+    # (key, byte offset, numpy dtype str, shape) per serialized array
+    arrays: Tuple[Tuple[str, int, str, Tuple[int, ...]], ...]
+
+
+def _shm_group(arrs: Dict[str, np.ndarray], tag: str
+               ) -> Optional[Dict[str, np.ndarray]]:
+    d = {k.split(".", 1)[1]: v for k, v in arrs.items()
+         if k.startswith(tag + ".")}
+    return d or None
+
+
+def batch_to_shm(br: BatchResult, *, prefix: str = "cmbatch") -> ShmBatchRef:
+    """Serialize ``br``'s arrays into a fresh shared-memory segment named
+    ``{prefix}_{random}`` and return the picklable :class:`ShmBatchRef`.
+    The caller's process keeps no mapping open; the segment lives until
+    the consumer unlinks it (or a prefix sweep reclaims it).
+
+    Keep ``prefix`` short: POSIX shm names are capped at 31 chars
+    **including** the leading slash on macOS (PSHMNAMLEN), and this
+    function appends ``_`` + 8 hex chars — so prefixes up to ~21 chars
+    are portable.  Name collisions (8 hex chars of randomness) are
+    retried with a fresh suffix."""
+    import secrets
+    from multiprocessing import shared_memory
+
+    items: List[Tuple[str, np.ndarray]] = []
+    for f in _SHM_FIELDS:
+        a = getattr(br, f)
+        if a is not None:
+            items.append((f, np.ascontiguousarray(a)))
+    for tag, d in (("hl", br.headroom_levels), ("lb", br.lat_breakdown),
+                   ("eb", br.energy_breakdown)):
+        if d:
+            for k in sorted(d):
+                items.append((f"{tag}.{k}", np.ascontiguousarray(d[k])))
+    metas: List[Tuple[str, int, str, Tuple[int, ...]]] = []
+    off = 0
+    for key, a in items:
+        off = -(-off // _SHM_ALIGN) * _SHM_ALIGN
+        metas.append((key, off, a.dtype.str, tuple(a.shape)))
+        off += a.nbytes
+    total = max(off, 1)
+    for _attempt in range(8):
+        try:
+            shm = shared_memory.SharedMemory(
+                name=f"{prefix}_{secrets.token_hex(4)}", create=True,
+                size=total)
+            break
+        except FileExistsError:
+            continue
+    else:
+        raise FileExistsError(
+            f"could not allocate a fresh shm name under prefix {prefix!r}")
+    try:
+        for (key, o, _dt, shape), (_key, a) in zip(metas, items):
+            dst = np.ndarray(shape, dtype=a.dtype, buffer=shm.buf, offset=o)
+            dst[...] = a
+            del dst             # release the buffer export before close()
+        ref = ShmBatchRef(shm.name, total, br.topo, tuple(metas))
+    except BaseException:
+        shm.close()
+        shm.unlink()
+        raise
+    shm.close()
+    return ref
+
+
+def batch_from_shm(ref: ShmBatchRef):
+    """Reattach a :class:`BatchResult` from ``ref``'s segment.
+
+    Returns ``(batch, shm)``: the batch's arrays are zero-copy views over
+    the segment, so ``shm`` (the ``SharedMemory`` handle) must stay alive
+    while the batch is in use, and the caller is responsible for
+    ``shm.unlink()`` exactly once when done (drop the batch's arrays
+    before ``shm.close()``, or skip close and let refcounting reclaim the
+    mapping)."""
+    from multiprocessing import shared_memory
+
+    shm = shared_memory.SharedMemory(name=ref.shm_name)
+    arrs = {key: np.ndarray(shape, dtype=np.dtype(dt), buffer=shm.buf,
+                            offset=off)
+            for key, off, dt, shape in ref.arrays}
+    br = BatchResult(
+        ref.topo, arrs["m_tiles"], arrs["k_tiles"], arrs["n_tiles"],
+        arrs["sp_cluster"], arrs["sp_core"], arrs["schedule"],
+        arrs["latency"], arrs["energy_pj"], arrs["valid"],
+        headroom=arrs.get("headroom"),
+        headroom_levels=_shm_group(arrs, "hl"),
+        lat_breakdown=_shm_group(arrs, "lb"),
+        energy_breakdown=_shm_group(arrs, "eb"))
+    return br, shm
+
+
+def shm_unlink(name: str) -> bool:
+    """Unlink segment ``name`` if it still exists; True iff it did.
+    Tolerates already-unlinked segments (idempotent cleanup)."""
+    from multiprocessing import shared_memory
+
+    try:
+        shm = shared_memory.SharedMemory(name=name)
+    except FileNotFoundError:
+        return False
+    shm.unlink()
+    shm.close()
+    return True
 
 
 # ------------------------------------------------------------- signatures
@@ -459,10 +665,17 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
             if track_breakdown else None,
             energy_breakdown={k_: np.zeros(shape) for k_ in ENERGY_KEYS}
             if track_breakdown else None)
-    ok, hr = validity_and_headroom(root, arch, tiling, co.tensors)
+    ok, hr, levels = validity_headroom_levels(root, arch, tiling, co.tensors)
     valid = np.broadcast_to(ok, shape).copy()
     headroom = np.ascontiguousarray(
         np.broadcast_to(np.asarray(hr, dtype=np.float64), shape))
+    # Read-only broadcast views, not copies: the levels unfold the
+    # already-materialized folded channel, so charging two extra
+    # full-grid arrays per evaluation would be pure waste (batch_to_shm
+    # makes them contiguous if and when a grid is serialized).
+    headroom_levels = {
+        lvl: np.broadcast_to(np.asarray(v, dtype=np.float64), shape)
+        for lvl, v in levels.items()}
     cost = CostModel(arch, tiling, co.tensors,
                      track_breakdown=track_breakdown).evaluate(root)
     latency = np.ascontiguousarray(
@@ -473,6 +686,7 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
     en_bd = dict(cost.energy_breakdown) if track_breakdown else None
     return BatchResult(topo, m, k, n, spc, spo, sched_names,
                        latency, energy, valid, headroom=headroom,
+                       headroom_levels=headroom_levels,
                        lat_breakdown=lat_bd, energy_breakdown=en_bd)
 
 

@@ -30,7 +30,7 @@ from .cost import CostModel, NodeCost
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Loop, Node, TileNode, Tiling
 from .numerics import ceil_div, is_array, vmax, vmin
-from .validate import validate_and_headroom
+from .validate import validate_headroom_levels
 from .workload import CompoundOp, Operation, TensorSpec
 
 __all__ = ["MappingSpec", "build_tree", "evaluate_mapping", "MappingResult"]
@@ -75,6 +75,11 @@ class MappingResult:
     # (capacity - resident)/capacity — the provisioning ("pareto3")
     # objective channel.  Negative iff some buffer overflows.
     headroom: float = 1.0
+    # Per-level worst slack ({'GB': ..., 'OB': ...}): the un-folded view
+    # of ``headroom`` (== min over the values), letting provisioning
+    # studies size the cluster (GB) and core (IB+WB+OB) buffers
+    # independently.
+    headroom_levels: Dict[str, float] = field(default_factory=dict)
 
     @property
     def latency(self) -> float:
@@ -543,7 +548,9 @@ def build_tree(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[TileNode,
 
 def evaluate_mapping(co: CompoundOp, arch: Arch, spec: MappingSpec) -> MappingResult:
     root, tiling = build_tree(co, arch, spec)
-    valid, headroom = validate_and_headroom(root, arch, tiling, co.tensors)
+    valid, headroom, levels = validate_headroom_levels(root, arch, tiling,
+                                                      co.tensors)
     cost = CostModel(arch, tiling, co.tensors).evaluate(root)
     return MappingResult(cost=cost, root=root, tiling=tiling, spec=spec,
-                         valid=valid, headroom=headroom)
+                         valid=valid, headroom=headroom,
+                         headroom_levels=levels)

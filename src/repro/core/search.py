@@ -32,32 +32,77 @@ spec), latency/energy minimized and headroom maximized.
 ``search_many()`` fans independent (workload, arch, kwargs) search cells
 out over a ``concurrent.futures`` pool — the sweep driver used by the
 benchmark harnesses.
+
+**Executor contract** (``search_many``/``parallel_map``): results are
+always returned in job order and are bit-identical across executors —
+the same grids are evaluated by the same code regardless of where they
+run, so ``executor='serial' | 'thread' | 'process'`` may be swapped
+freely for scale without perturbing any reported optimum.
+
+* ``'serial'`` — everything in the calling thread; the baseline the
+  other executors must reproduce exactly.
+* ``'thread'`` — a ``ThreadPoolExecutor`` sharing the in-process LRU
+  grid/spec caches; cheap to start but GIL-bound on the Python parts of
+  tree construction.
+* ``'process'`` — a ``ProcessPoolExecutor`` fed **chunks** of jobs (so
+  per-worker caches amortize across a chunk and pool workers persist
+  across chunks).  Exhaustive-mode jobs return their per-topology
+  :class:`~repro.core.batcheval.BatchResult` grids through
+  ``multiprocessing.shared_memory`` segments — the parent reattaches the
+  arrays zero-copy (:func:`repro.core.batcheval.batch_from_shm`) and
+  runs the same reduction as the serial path; only tiny
+  :class:`~repro.core.batcheval.ShmBatchRef` descriptors cross the
+  pickle channel.  Randomized-mode jobs (space above the exhaustive
+  limit) return their small ``SearchResult`` via pickle as before.
+  Segment lifecycle: workers create, the parent unlinks after reduction;
+  a sweep-scoped name prefix lets :func:`cleanup_shm_segments` reclaim
+  segments orphaned by a worker crash, and the reclamation runs on every
+  sweep exit (success, error or ``BrokenProcessPool``).
+* ``'auto'`` — ``'process'`` for sweeps of at least
+  ``PROCESS_MIN_JOBS`` jobs when shared memory works on the platform,
+  else ``'thread'``.
+
+Degradations warn instead of failing: an unavailable process pool falls
+back to threads, and a pool that *breaks* mid-sweep (OOM-killed worker)
+finishes the remaining jobs serially — both emit a ``RuntimeWarning``.
 """
 from __future__ import annotations
 
+import inspect
 import math
 import os
 import random
+import secrets
 import warnings
 from concurrent.futures import (BrokenExecutor, ProcessPoolExecutor,
                                 ThreadPoolExecutor)
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .batcheval import (OBJECTIVES, ParetoArchive, enumerate_topologies,
+from .batcheval import (OBJECTIVES, BatchResult, ParetoArchive,
+                        batch_from_shm, batch_to_shm, enumerate_topologies,
                         evaluate_cached, evaluate_topology_grid, grid_size,
-                        pareto_merge, pareto_merge3)
+                        pareto_merge, pareto_merge3, shm_unlink)
 from .hardware import Arch
 from .ir import MappingResult, MappingSpec, evaluate_mapping
 from .workload import CompoundOp
 
 __all__ = ["SearchResult", "search", "search_many", "parallel_map",
            "candidate_specs", "pow2_tilings", "divisors",
-           "fanout_candidates", "EXHAUSTIVE_LIMIT"]
+           "fanout_candidates", "cleanup_shm_segments",
+           "EXHAUSTIVE_LIMIT", "PROCESS_MIN_JOBS"]
 
 # Exhaustive enumeration cap: above this many grid points per search the
-# randomized fallback kicks in.  The paper-space grids are ~1e3 points.
-EXHAUSTIVE_LIMIT = 65536
+# randomized fallback kicks in.  The paper-space grids are ~1e3-3e4
+# points; re-budgeted (PR 4) so the divisor-tiling paper-table spaces —
+# the largest is the non-pow2 provisioning GEMM on cloud at ~117k points
+# — stay exhaustive.
+EXHAUSTIVE_LIMIT = 131072
+
+# search_many(executor='auto') switches from threads to the process pool
+# at this many jobs: below it, pool fork/spawn overhead dominates the
+# sweep; above it, bypassing the GIL wins.
+PROCESS_MIN_JOBS = 8
 
 # Randomized fallback: how many resamples one iteration spends to dodge
 # an already-seen spec before conceding the iteration, and the bound on
@@ -260,16 +305,11 @@ def search(co: CompoundOp, arch: Arch, *,
     ``exhaustive_limit`` points — which is both faster and provably
     no-worse than any sampled subset of the same space.
     """
-    if objective not in OBJECTIVES:
-        raise ValueError(f"unknown objective {objective!r}")
-    cands = candidate_specs(co, arch, variants=variants,
-                            allow_stats_gran=allow_stats_gran,
-                            fanouts=fanouts,
-                            divisor_tilings=divisor_tilings)
-    if mode == "auto":
-        topos = enumerate_topologies(co, cands)
-        total = len(topos) * grid_size(co, cands)
-        mode = "exhaustive" if total <= exhaustive_limit else "randomized"
+    mode, cands, objective = _plan_search(co, arch, {
+        "objective": objective, "variants": variants,
+        "allow_stats_gran": allow_stats_gran, "fanouts": fanouts,
+        "divisor_tilings": divisor_tilings, "mode": mode,
+        "exhaustive_limit": exhaustive_limit})
     if mode == "exhaustive":
         return _search_exhaustive(co, arch, cands, objective)
     if mode == "randomized":
@@ -279,8 +319,46 @@ def search(co: CompoundOp, arch: Arch, *,
     raise ValueError(f"unknown search mode {mode!r}")
 
 
+def _plan_search(co: CompoundOp, arch: Arch, kw: Dict
+                 ) -> Tuple[str, Dict[str, List], str]:
+    """Resolve a search job's (mode, candidate axes, objective) exactly
+    as :func:`search` would — same kwarg defaults (read from search()'s
+    own signature, so they cannot drift), same auto rule — without
+    running it.  Shared by ``search()`` and the process-pool sweep
+    workers so both sides of the wire agree on the search plan."""
+    def opt(name: str):
+        return kw.get(name, _SEARCH_DEFAULTS[name])
+
+    objective = opt("objective")
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}")
+    cands = candidate_specs(
+        co, arch, variants=opt("variants"),
+        allow_stats_gran=opt("allow_stats_gran"),
+        fanouts=opt("fanouts"),
+        divisor_tilings=opt("divisor_tilings"))
+    mode = opt("mode")
+    if mode == "auto":
+        topos = enumerate_topologies(co, cands)
+        total = len(topos) * grid_size(co, cands)
+        mode = ("exhaustive" if total <= opt("exhaustive_limit")
+                else "randomized")
+    return mode, cands, objective
+
+
 def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
                        objective: str) -> SearchResult:
+    grids = (evaluate_topology_grid(co, arch, topo, cands)
+             for topo in enumerate_topologies(co, cands))
+    return _reduce_grids(co, arch, grids, objective)
+
+
+def _reduce_grids(co: CompoundOp, arch: Arch, grids: Iterable[BatchResult],
+                  objective: str) -> SearchResult:
+    """Fold per-topology grids into a SearchResult.  This is the single
+    reduction used by the serial/thread paths (grids evaluated in
+    process) AND the process-pool parent (grids reattached from shared
+    memory), which is what makes executor choice bit-invisible."""
     pareto = objective in ("pareto", "pareto3")
     best_spec: Optional[MappingSpec] = None
     best_score = math.inf
@@ -288,8 +366,7 @@ def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
     evaluated = valid = 0
     history: List[Tuple[int, float]] = []
     front_pts: List[Tuple] = []
-    for topo in enumerate_topologies(co, cands):
-        br = evaluate_topology_grid(co, arch, topo, cands)
+    for br in grids:
         evaluated += br.size
         valid += int(br.valid.sum())
         if objective == "pareto3":
@@ -425,9 +502,12 @@ def parallel_map(fn: Callable, items: Sequence, *,
     pool_cls = ProcessPoolExecutor if executor == "process" else ThreadPoolExecutor
     try:
         pool = pool_cls(max_workers=max_workers)
-    except (OSError, PermissionError, ImportError):
+    except (OSError, PermissionError, ImportError) as e:
         # Pool creation failed (e.g. sandbox without multiprocessing
         # primitives) — errors raised by fn itself still propagate below.
+        warnings.warn(
+            f"parallel_map: could not create a {executor!r} pool ({e!r}); "
+            "running serially", RuntimeWarning, stacklevel=2)
         return [fn(it) for it in items]
     results: List = []
     try:
@@ -453,15 +533,255 @@ def parallel_map(fn: Callable, items: Sequence, *,
     return results
 
 
+def _shm_usable() -> bool:
+    """One-shot probe: can this platform create (and unlink) a
+    ``multiprocessing.shared_memory`` segment with POSIX persist-until-
+    unlink semantics?  Memoized — sandboxes without /dev/shm or the
+    _posixshmem module probe once, not per sweep.  Non-POSIX platforms
+    are excluded outright: Windows named shared memory is freed when the
+    last handle closes, so the create-in-worker / close / attach-in-
+    parent lifecycle would lose the segment before the parent attaches
+    (jobs then take the pickle wire instead)."""
+    global _SHM_USABLE
+    if _SHM_USABLE is None:
+        if os.name != "posix":
+            _SHM_USABLE = False
+            return _SHM_USABLE
+        try:
+            from multiprocessing import shared_memory
+            seg = shared_memory.SharedMemory(create=True, size=1)
+            seg.close()
+            seg.unlink()
+            _SHM_USABLE = True
+        except Exception:
+            _SHM_USABLE = False
+    return _SHM_USABLE
+
+
+_SHM_USABLE: Optional[bool] = None
+
+
+def cleanup_shm_segments(prefix: str) -> List[str]:
+    """Best-effort reclamation of shared-memory segments whose names
+    start with ``prefix`` (a sweep-scoped token): unlinks and returns the
+    names found.  This is the crash backstop of the process-pool sweep —
+    a worker that dies between creating a segment and returning its
+    :class:`~repro.core.batcheval.ShmBatchRef` orphans the segment, and
+    the parent cannot learn its name through the broken pool.  POSIX
+    ``/dev/shm`` scan; a no-op on platforms without it."""
+    removed: List[str] = []
+    base = "/dev/shm"
+    if not os.path.isdir(base):
+        return removed
+    try:
+        names = os.listdir(base)
+    except OSError:
+        return removed
+    for fn in names:
+        if fn.startswith(prefix) and shm_unlink(fn):
+            removed.append(fn)
+    return removed
+
+
+# Keyword arguments search() accepts and their default values — derived
+# from the signature so the process-path kwarg validation and
+# _plan_search's defaults can never drift from search() itself.
+_SEARCH_DEFAULTS = {
+    name: p.default for name, p in inspect.signature(search).parameters.items()
+    if name not in ("co", "arch")}
+_SEARCH_KWARGS = frozenset(_SEARCH_DEFAULTS)
+
+
+def _run_search_chunk(payload: Tuple) -> List[Tuple]:
+    """Process-pool worker: run a chunk of search jobs, one wire tuple
+    per job.  Exhaustive-mode jobs evaluate their per-topology grids
+    (through the worker's persistent LRU grid cache — chunking exists so
+    repeated (co, arch) cells amortize it) and ship them as
+    ``('grids', objective, [ShmBatchRef, ...])``; randomized-mode jobs
+    (or all jobs when shared memory is unusable) run to completion and
+    ship ``('result', SearchResult)`` through pickle."""
+    prefix, use_shm, chunk = payload
+    out: List[Tuple] = []
+    for job in chunk:
+        co, arch, kw = _norm_job(job)
+        # The shm shortcut reads kwargs with .get() defaults, so an
+        # unknown (typoed) kwarg must NOT be silently ignored here while
+        # serial/thread raise TypeError from search(**kw): fall through
+        # to search() so every executor rejects the job identically.
+        if use_shm and set(kw) <= _SEARCH_KWARGS:
+            mode, cands, objective = _plan_search(co, arch, kw)
+            if mode == "exhaustive":
+                refs = []
+                try:
+                    for topo in enumerate_topologies(co, cands):
+                        br = evaluate_topology_grid(co, arch, topo, cands)
+                        refs.append(batch_to_shm(br, prefix=prefix))
+                except BaseException:
+                    # the job dies with its segments, not with a leak
+                    for ref in refs:
+                        shm_unlink(ref.shm_name)
+                    raise
+                out.append(("grids", objective, refs))
+                continue
+            if mode == "randomized":
+                # reuse the resolved plan instead of paying
+                # candidate/topology enumeration again inside search()
+                out.append(("result", _search_randomized(
+                    co, arch, cands,
+                    budget=kw.get("budget", _SEARCH_DEFAULTS["budget"]),
+                    seed=kw.get("seed", _SEARCH_DEFAULTS["seed"]),
+                    objective=objective,
+                    hillclimb_frac=kw.get(
+                        "hillclimb_frac",
+                        _SEARCH_DEFAULTS["hillclimb_frac"]))))
+                continue
+            # an explicitly-passed unknown mode falls through: search()
+            # raises the same ValueError the serial path would
+        out.append(("result", search(co, arch, **kw)))
+    return out
+
+
+def _attach_refs(refs: Sequence, brs: List[BatchResult],
+                 shms: List) -> None:
+    """Attach every ref, appending in lockstep (in its own frame so no
+    stray local keeps a view alive past the caller's cleanup)."""
+    for ref in refs:
+        br, shm = batch_from_shm(ref)
+        brs.append(br)
+        shms.append(shm)
+
+
+def _finish_wire(co: CompoundOp, arch: Arch, wire: Tuple) -> SearchResult:
+    """Parent-side completion of one worker wire tuple.  For ``'grids'``
+    wires: reattach each BatchResult zero-copy, run the shared
+    :func:`_reduce_grids` reduction (identical to the serial path), then
+    unlink the segments — on success or failure."""
+    if wire[0] == "result":
+        return wire[1]
+    _kind, objective, refs = wire
+    shms: List = []
+    brs: List[BatchResult] = []
+    try:
+        _attach_refs(refs, brs, shms)
+        return _reduce_grids(co, arch, brs, objective)
+    finally:
+        brs.clear()                  # drop the views before close()
+        for shm in shms:
+            try:
+                shm.close()
+            except BufferError:      # a view outlived the reduction
+                pass
+            try:
+                shm.unlink()
+            except FileNotFoundError:
+                pass
+        for ref in refs[len(shms):]:     # attach failed partway
+            shm_unlink(ref.shm_name)
+
+
+def _search_many_process(jobs: List[Tuple[CompoundOp, Arch, Dict]], *,
+                         max_workers: Optional[int],
+                         chunksize: Optional[int]) -> List[SearchResult]:
+    """The process-pool sweep path: chunked job scheduling over a
+    ``ProcessPoolExecutor`` with shared-memory grid transport.  Falls
+    back — warning, never failing — to threads when the pool cannot be
+    created and to serial execution of the remaining jobs when the pool
+    breaks mid-sweep; every exit path reclaims the sweep's segments."""
+    use_shm = _shm_usable()
+    # Short sweep-scoped prefix: batch_to_shm appends '_' + 8 hex chars
+    # and macOS caps shm names at 31 chars including the leading slash.
+    prefix = f"cm{os.getpid():x}x{secrets.token_hex(2)}"
+    workers = max_workers or os.cpu_count() or 2
+    if chunksize is None:
+        # ~4 chunks per worker: coarse enough to amortize per-chunk
+        # dispatch and per-worker cache warmup, fine enough to balance.
+        chunksize = max(1, math.ceil(len(jobs) / (workers * 4)))
+    chunks = [jobs[i:i + chunksize] for i in range(0, len(jobs), chunksize)]
+    try:
+        pool = ProcessPoolExecutor(max_workers=max_workers)
+    except (OSError, PermissionError, ImportError) as e:
+        warnings.warn(
+            f"search_many: process pool unavailable ({e!r}); falling back "
+            "to threads", RuntimeWarning, stacklevel=3)
+        return parallel_map(_run_search_job, jobs, max_workers=max_workers,
+                            executor="thread")
+    results: List[SearchResult] = []
+    broken: Optional[BaseException] = None
+    try:
+        with pool:
+            # Bounded submission window (~2 chunks in flight per worker,
+            # refilled as results drain): results are consumed strictly
+            # in order, so submitting everything upfront would let
+            # completed-but-unconsumed grids pile up in /dev/shm behind
+            # one slow early chunk — worst case the whole sweep's grid
+            # bytes against a RAM-capped tmpfs.
+            window = max(2 * workers, 1)
+            pending: List[Tuple[List, object]] = []
+            submitted = 0
+
+            def refill() -> None:
+                nonlocal submitted
+                while submitted < len(chunks) and len(pending) < window:
+                    c = chunks[submitted]
+                    pending.append(
+                        (c, pool.submit(_run_search_chunk,
+                                        (prefix, use_shm, c))))
+                    submitted += 1
+
+            refill()
+            while pending:
+                chunk, fut = pending.pop(0)
+                try:
+                    wires = fut.result()
+                except BrokenExecutor as e:
+                    broken = e
+                    for _c, f in pending:
+                        f.cancel()
+                    break
+                refill()        # keep workers busy during the reduction
+                for (co, arch, _kw), wire in zip(chunk, wires):
+                    results.append(_finish_wire(co, arch, wire))
+        if broken is not None:
+            warnings.warn(
+                f"search_many: worker pool broke after {len(results)}/"
+                f"{len(jobs)} jobs ({broken!r}); finishing remaining jobs "
+                "serially", RuntimeWarning, stacklevel=3)
+            results.extend(_run_search_job(j) for j in jobs[len(results):])
+    finally:
+        # Reclaims segments orphaned by a crashed worker (their refs
+        # never arrived) or dropped mid-delivery; finds nothing on the
+        # clean path, where _finish_wire unlinked each segment already.
+        cleanup_shm_segments(prefix)
+    return results
+
+
 def search_many(jobs: Sequence, *,
                 max_workers: Optional[int] = None,
-                executor: str = "auto") -> List[SearchResult]:
+                executor: str = "auto",
+                chunksize: Optional[int] = None) -> List[SearchResult]:
     """Parallel sweep driver: run many independent searches concurrently.
 
     Each job is ``(co, arch)``, ``(co, arch, kwargs)`` or a dict with
     ``co``/``arch`` keys plus search kwargs.  Results come back in job
-    order.  Used by ``benchmarks/paper_tables.py`` and friends to fan out
+    order and are bit-identical across executors (see the module
+    docstring for the full executor contract).
+
+    ``executor='process'`` runs jobs in chunks (``chunksize`` jobs per
+    task, default ~4 chunks per worker) on a process pool, shipping
+    exhaustive-mode grids back through shared memory; ``'thread'`` and
+    ``'serial'`` behave as before; ``'auto'`` picks ``'process'`` for
+    sweeps of at least ``PROCESS_MIN_JOBS`` jobs when the platform
+    supports shared memory, else ``'thread'``.  Used by
+    ``benchmarks/paper_tables.py`` and friends to fan out
     (workload, arch, variant) cells.
     """
+    jobs = [_norm_job(j) for j in jobs]
+    if executor == "auto":
+        executor = ("process"
+                    if len(jobs) >= PROCESS_MIN_JOBS and _shm_usable()
+                    else "thread")
+    if executor == "process" and len(jobs) > 1:
+        return _search_many_process(jobs, max_workers=max_workers,
+                                    chunksize=chunksize)
     return parallel_map(_run_search_job, jobs, max_workers=max_workers,
                         executor=executor)

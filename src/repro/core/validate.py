@@ -17,8 +17,9 @@ from .numerics import vmin
 from .workload import TensorSpec
 
 __all__ = ["validate_tree", "validate_and_headroom", "validity_mask",
-           "validity_and_headroom", "capacity_headroom", "ValidationError",
-           "residency_report"]
+           "validity_and_headroom", "validity_headroom_levels",
+           "validate_headroom_levels", "capacity_headroom",
+           "ValidationError", "residency_report"]
 
 
 class ValidationError(Exception):
@@ -101,18 +102,39 @@ def validity_and_headroom(node: Node, arch: Arch, tiling: Tiling,
     the buffers are untouched, 0.0 exactly full, negative over capacity
     (such points are also invalid).  It is the third objective channel of
     the provisioning-study Pareto fronts (``objective='pareto3'``)."""
+    ok, hr, _levels = validity_headroom_levels(node, arch, tiling, tensors)
+    return ok, hr
+
+
+def validity_headroom_levels(node: Node, arch: Arch, tiling: Tiling,
+                             tensors: Dict[str, TensorSpec]
+                             ) -> Tuple[np.ndarray, np.ndarray,
+                                        Dict[str, np.ndarray]]:
+    """(validity mask, folded headroom, per-level headroom) from one
+    residency walk.
+
+    The per-level dict maps each non-DRAM memory level present in the
+    tree (``'GB'`` — the per-cluster global buffer — and ``'OB'`` — the
+    per-core IB+WB+OB budget) to the worst relative slack among that
+    level's TileNodes only, so provisioning studies can size the cluster
+    and core buffers independently instead of reading the folded
+    worst-over-all-levels scalar.  The folded headroom equals the ``min``
+    across the per-level values (bit-identical to the historical
+    scalar)."""
     ok = np.asarray(tiling.overfactor_mask())
-    hr = None
+    levels: Dict[str, np.ndarray] = {}
     for level, _label, resident, cap in residency_report(node, arch, tiling,
                                                          tensors):
         if level == "DRAM":
             continue  # DRAM holds full tensors by construction
         ok = np.logical_and(ok, resident <= cap)
         frac = (cap - np.asarray(resident, dtype=np.float64)) / cap
-        hr = frac if hr is None else np.minimum(hr, frac)
-    if hr is None:
-        hr = np.asarray(1.0)
-    return ok, hr
+        prev = levels.get(level)
+        levels[level] = frac if prev is None else np.minimum(prev, frac)
+    hr = np.asarray(1.0)
+    for frac in levels.values():
+        hr = np.minimum(hr, frac)
+    return ok, hr, levels
 
 
 def validate_and_headroom(node: Node, arch: Arch, tiling: Tiling,
@@ -123,17 +145,35 @@ def validate_and_headroom(node: Node, arch: Arch, tiling: Tiling,
     validity verdict and the headroom (the per-spec evaluation hot path
     must not pay the tensor-tile walk twice).  Raises like
     ``validate_tree`` for inconsistent tilings."""
+    valid, hr, _levels = validate_headroom_levels(node, arch, tiling, tensors)
+    return valid, hr
+
+
+def validate_headroom_levels(node: Node, arch: Arch, tiling: Tiling,
+                             tensors: Dict[str, TensorSpec]
+                             ) -> Tuple[bool, float, Dict[str, float]]:
+    """Scalar-path analogue of :func:`validity_headroom_levels`: one
+    residency walk yields (valid, folded headroom, per-level headroom).
+    The per-level dict holds each non-DRAM level's own worst slack (GB =
+    cluster buffer, OB = per-core IB+WB+OB budget); the folded value is
+    their ``min``.  Raises like ``validate_tree`` for inconsistent
+    tilings."""
     tiling.validate()
     valid = True
-    hr = 1.0
+    levels: Dict[str, float] = {}
     for level, _label, resident, cap in residency_report(node, arch, tiling,
                                                          tensors):
         if level == "DRAM":
             continue
         if resident > cap:
             valid = False
-        hr = vmin(hr, (cap - resident) / cap)
-    return valid, hr
+        frac = (cap - resident) / cap
+        levels[level] = frac if level not in levels \
+            else vmin(levels[level], frac)
+    hr = 1.0
+    for frac in levels.values():
+        hr = vmin(hr, frac)
+    return valid, hr, levels
 
 
 def capacity_headroom(node: Node, arch: Arch, tiling: Tiling,

@@ -170,7 +170,7 @@ def test_candidate_specs_divisor_axes():
 
 def test_divisor_search_no_worse_than_pow2():
     """Superset candidate sets can only improve the exhaustive optimum —
-    the BENCH_search schema-v3 gate, spot-checked here on a non-pow2 dim
+    the BENCH_search divisor-vs-pow2 gate, spot-checked here on a non-pow2 dim
     where the divisor axes genuinely add fanouts."""
     co = gemm_softmax(384, 768, 96)
     arch = edge()
@@ -230,6 +230,34 @@ def test_validity_and_headroom_consistent():
     assert np.array_equal(validity_mask(root, arch, tiling, co.tensors), ok)
     # capacity-overflow points have negative headroom
     assert ((hr >= 0) | ~ok).all()
+
+
+def test_headroom_levels_unfold_the_scalar():
+    """The per-level headroom vector (ROADMAP satellite): GB (cluster
+    buffer) and OB (per-core IB+WB+OB) slacks are exposed alongside the
+    folded worst-slack scalar, which must equal their min — on both the
+    batched and the per-spec paths, bit-identically."""
+    co = gemm_softmax(512, 1024, 128)
+    arch = edge()
+    br = evaluate_specs_batch(co, arch, Topology(variant="fused_dist"),
+                              [1, 4, 64], [1, 2, 2], [1, 1, 1])
+    assert sorted(br.headroom_levels) == ["GB", "OB"]
+    folded = np.minimum.reduce(list(br.headroom_levels.values()))
+    assert np.array_equal(folded, br.headroom)
+    for i in range(br.size):
+        r = evaluate_mapping(co, arch, br.spec_at(i))
+        assert sorted(r.headroom_levels) == ["GB", "OB"]
+        assert min(r.headroom_levels.values()) == r.headroom
+        for lvl, v in r.headroom_levels.items():
+            assert br.headroom_levels[lvl][i] == pytest.approx(v, rel=1e-12)
+    # the two levels genuinely dissociate: a wide-N shape has both a
+    # GB-limited point (deep k tiling shrinks the core tiles, the full-N
+    # row dominates the cluster buffer) and an OB-limited point
+    wide = gemm_softmax(512, 8192, 128)
+    grid = evaluate_specs_batch(wide, arch, Topology(variant="fused_dist"),
+                                [1, 64], [1, 8], [1, 1])
+    gb, ob = grid.headroom_levels["GB"], grid.headroom_levels["OB"]
+    assert (gb < ob).any() and (ob < gb).any()
 
 
 # ------------------------------------------------------- 3-D Pareto front
@@ -341,6 +369,31 @@ def test_pareto_archive_bounded_and_non_dominated():
     assert [p[2] for p in arc2.front()] == ["dominator"]
     with pytest.raises(ValueError):
         ParetoArchive(dims=4)
+
+
+def test_pareto_archive_crowding_beats_decimation_spread():
+    """Regression (ROADMAP satellite): thinning is crowding-distance
+    pruning, not decimation.  On a front with a dense cluster, decimation
+    keeps every other point — halving the sparse stretches while the
+    cluster stays dense — whereas crowding pruning eats the cluster first
+    and keeps the spread points, so the pruned front's worst gap is
+    strictly smaller."""
+    xs = [0.0, 0.30, 0.301, 0.302, 0.303, 0.304, 0.305, 0.65, 1.0]
+    arc = ParetoArchive(dims=2, maxlen=8)
+    for x in xs:
+        arc.add((x, 1.0 - x, None))         # all mutually non-dominated
+    kept = [p[0] for p in arc.front()]      # 9th add triggered one thin
+    assert len(kept) == 4                   # maxlen // 2
+    assert kept[0] == 0.0 and kept[-1] == 1.0   # endpoints always survive
+    assert 0.65 in kept                     # the isolated interior point
+    # decimation (the old _thin) on the same sorted front
+    decimated = sorted(xs)[::2]             # -> drops 0.65, keeps cluster
+    gap = lambda ks: max(b - a for a, b in zip(ks, ks[1:]))
+    assert gap(kept) < gap(decimated)
+    # the kept set is still mutually non-dominated and latency-sorted
+    front = arc.front()
+    assert all(a[0] < b[0] and a[1] > b[1]
+               for a, b in zip(front, front[1:]))
 
 
 # -------------------------------------------- randomized-search satellites
