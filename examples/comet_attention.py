@@ -5,8 +5,11 @@ strategy used by the training framework.
 
     PYTHONPATH=src python examples/comet_attention.py
 """
+import time
+
 from repro.core import attention, flash_attention
 from repro.core.hardware import cloud, edge, tpu_v5e
+from repro.core.plan import get_plan_cache
 from repro.core.search import search
 from repro.kernels.autotune import attention_blocks, gemm_epilogue_blocks
 from repro.parallel.collective_planner import plan_softmax_strategy
@@ -27,13 +30,25 @@ def main() -> None:
                   f"FA {fa*1e6:8.1f}us  (FA speedup {ua/fa:4.2f}x)")
 
     print("\n== TPU integration: COMET-tuned Pallas block sizes ==")
+    print("   (each selection resolves through the PlanCache: first call")
+    print("   solves and persists a plan, later calls/processes look up)")
     for (sq, skv, d) in ((4096, 4096, 128), (1, 32768, 128),
                          (32768, 32768, 64)):
+        t0 = time.perf_counter()
         bq, bk = attention_blocks(sq, skv, d)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        attention_blocks(sq, skv, d)
+        warm = time.perf_counter() - t0
         print(f"  flash_attention S={sq:6d}/{skv:6d} d={d:4d} "
-              f"-> block_q={bq}, block_k={bk}")
+              f"-> block_q={bq}, block_k={bk}  "
+              f"(cold {cold * 1e3:5.1f}ms, warm {warm * 1e6:5.1f}us)")
     bm, bk = gemm_epilogue_blocks(4096, 8192, 4096)
     print(f"  gemm_softmax 4096x8192x4096 -> block_m={bm}, block_k={bk}")
+    stats = get_plan_cache().stats
+    print(f"  plan cache: {stats['misses']} solved, "
+          f"{stats['hits_mem'] + stats['hits_disk']} hits "
+          f"(store: {get_plan_cache().root})")
 
     print("\n== collective planner: vocab-sharded softmax strategy ==")
     for rows, cols in ((65536, 151552), (128, 129280), (1, 4096)):

@@ -29,9 +29,21 @@ a single scalar winner: ``SearchResult.front`` holds the non-dominated
 provisioning studies: front points are (latency, energy_pj, headroom,
 spec), latency/energy minimized and headroom maximized.
 
+``search(..., candidate_list=[MappingSpec, ...])`` is **candidates
+mode**: an explicit (possibly correlated) spec list is evaluated through
+the batched engine instead of the enumerated axes — the entry point the
+kernel autotuner and the :mod:`repro.core.plan` layer use for
+VMEM-prefiltered tile-pair sweeps.
+
 ``search_many()`` fans independent (workload, arch, kwargs) search cells
 out over a ``concurrent.futures`` pool — the sweep driver used by the
-benchmark harnesses.
+benchmark harnesses.  Process-pool chunk assignment is **size-aware** by
+default (``chunking='size'``): jobs are ordered by estimated space size
+and dealt longest-first round-robin across chunks, so a ~117k-point
+exhaustive job starts immediately instead of serializing behind tiny
+cells; ``chunking='contiguous'`` restores plain slicing.  Chunking only
+moves jobs between workers — results always come back in job order and
+stay bit-identical.
 
 **Executor contract** (``search_many``/``parallel_map``): results are
 always returned in job order and are bit-identical across executors —
@@ -79,10 +91,11 @@ from concurrent.futures import (BrokenExecutor, ProcessPoolExecutor,
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .batcheval import (OBJECTIVES, BatchResult, ParetoArchive,
+from .batcheval import (OBJECTIVES, BatchResult, ParetoArchive, Topology,
                         batch_from_shm, batch_to_shm, enumerate_topologies,
-                        evaluate_cached, evaluate_topology_grid, grid_size,
-                        pareto_merge, pareto_merge3, shm_unlink)
+                        evaluate_cached, evaluate_specs_batch,
+                        evaluate_topology_grid, grid_size, pareto_merge,
+                        pareto_merge3, shm_unlink)
 from .hardware import Arch
 from .ir import MappingResult, MappingSpec, evaluate_mapping
 from .workload import CompoundOp
@@ -120,11 +133,14 @@ class SearchResult:
     # for scalar objectives, latency (the hill-climb steer) for the front
     # objectives — NOT unconditionally latency.
     history: List[Tuple[int, float]] = field(default_factory=list)
-    mode: str = "randomized"    # 'exhaustive' | 'randomized'
+    mode: str = "randomized"    # 'exhaustive' | 'randomized' | 'candidates'
     # objective='pareto': non-dominated (latency, energy_pj, spec) points,
     # ascending latency; objective='pareto3': (latency, energy_pj,
     # headroom, spec).  None for scalar objectives.
     front: Optional[List[Tuple]] = None
+    # mode='candidates': index of the winning spec in the caller's
+    # ``candidate_list`` (None for the enumerated modes).
+    best_index: Optional[int] = None
 
     @property
     def latency(self) -> float:
@@ -290,7 +306,9 @@ def search(co: CompoundOp, arch: Arch, *,
            divisor_tilings: bool = False,
            hillclimb_frac: float = 0.5,
            mode: str = "auto",
-           exhaustive_limit: int = EXHAUSTIVE_LIMIT) -> SearchResult:
+           exhaustive_limit: int = EXHAUSTIVE_LIMIT,
+           candidate_list: Optional[Sequence[MappingSpec]] = None
+           ) -> SearchResult:
     """Map-space search.  ``objective`` is 'latency', 'energy', 'edp'
     (energy-delay product), 'pareto' (latency/energy front) or 'pareto3'
     (latency/energy/capacity-headroom front; see ``SearchResult.front``).
@@ -304,12 +322,27 @@ def search(co: CompoundOp, arch: Arch, *,
     'auto' (default) picks exhaustive whenever the space fits within
     ``exhaustive_limit`` points — which is both faster and provably
     no-worse than any sampled subset of the same space.
+
+    ``candidate_list`` switches to **candidates mode**: instead of
+    enumerating the generic axes, the explicit list of
+    :class:`~repro.core.ir.MappingSpec` candidates is evaluated through
+    the batched engine (grouped by topology, original order preserved)
+    and the best one wins.  This is the kernel-autotuning entry point:
+    correlated candidate sets (e.g. VMEM-prefiltered (block_q, block_k)
+    pairs) cannot be expressed as a product grid.  Selection: lowest
+    objective score among the memory-fit-valid candidates; when the arch
+    model rejects every candidate (a kernel pre-filter is the binding
+    constraint then), lowest raw latency.  ``SearchResult.best_index``
+    reports the winner's position in the list.  Scalar objectives only.
     """
     mode, cands, objective = _plan_search(co, arch, {
         "objective": objective, "variants": variants,
         "allow_stats_gran": allow_stats_gran, "fanouts": fanouts,
         "divisor_tilings": divisor_tilings, "mode": mode,
-        "exhaustive_limit": exhaustive_limit})
+        "exhaustive_limit": exhaustive_limit,
+        "candidate_list": candidate_list})
+    if mode == "candidates":
+        return _search_candidates(co, arch, list(candidate_list), objective)
     if mode == "exhaustive":
         return _search_exhaustive(co, arch, cands, objective)
     if mode == "randomized":
@@ -332,6 +365,11 @@ def _plan_search(co: CompoundOp, arch: Arch, kw: Dict
     objective = opt("objective")
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}")
+    if opt("candidate_list") is not None:
+        if objective in ("pareto", "pareto3"):
+            raise ValueError(
+                "candidate_list mode supports scalar objectives only")
+        return "candidates", {}, objective
     cands = candidate_specs(
         co, arch, variants=opt("variants"),
         allow_stats_gran=opt("allow_stats_gran"),
@@ -351,6 +389,62 @@ def _search_exhaustive(co: CompoundOp, arch: Arch, cands: Dict[str, List],
     grids = (evaluate_topology_grid(co, arch, topo, cands)
              for topo in enumerate_topologies(co, cands))
     return _reduce_grids(co, arch, grids, objective)
+
+
+def _search_candidates(co: CompoundOp, arch: Arch,
+                       specs: List[MappingSpec],
+                       objective: str) -> SearchResult:
+    """Candidates mode: evaluate an explicit spec list through the batched
+    engine.  Specs are grouped by topology (variant/collective granularity
+    /GB loop order) so each group is one SoA pass with the schedule as a
+    parallel axis; scores land back at the specs' original positions, so
+    selection order (ties included) matches evaluating the list in order.
+    """
+    import numpy as np
+
+    if not specs:
+        raise ValueError("candidate_list is empty")
+    n = len(specs)
+    lat = np.empty(n)
+    en = np.empty(n)
+    valid = np.zeros(n, dtype=bool)
+    groups: Dict[Tuple, List[int]] = {}
+    for i, s in enumerate(specs):
+        groups.setdefault(
+            (s.variant, s.collective_gran, tuple(s.loop_order_gb)),
+            []).append(i)
+    for (variant, gran, lo), idxs in groups.items():
+        topo = Topology(variant=variant, collective_gran=gran,
+                        loop_order_gb=lo)
+        br = evaluate_specs_batch(
+            co, arch, topo,
+            [specs[i].m_tiles for i in idxs],
+            [specs[i].k_tiles for i in idxs],
+            [specs[i].n_tiles for i in idxs],
+            [specs[i].sp_cluster for i in idxs],
+            [specs[i].sp_core for i in idxs],
+            [specs[i].schedule for i in idxs])
+        lat[idxs] = br.latency
+        en[idxs] = br.energy_pj
+        valid[idxs] = br.valid
+    if valid.any():
+        scores = np.where(
+            valid,
+            lat if objective == "latency"
+            else en if objective == "energy" else lat * en,
+            np.inf)
+        i = int(np.argmin(scores))
+        score = float(scores[i])
+    else:
+        # every candidate rejected by the arch model: the caller's own
+        # pre-filters (e.g. kernel VMEM constraints) are the binding
+        # constraint, so fall back to raw latency order
+        i = int(np.argmin(lat))
+        score = float(lat[i])
+    best = evaluate_mapping(co, arch, specs[i])
+    return SearchResult(best=best, evaluated=n, valid=int(valid.sum()),
+                        history=[(n, score)], mode="candidates",
+                        best_index=i)
 
 
 def _reduce_grids(co: CompoundOp, arch: Arch, grids: Iterable[BatchResult],
@@ -679,9 +773,57 @@ def _finish_wire(co: CompoundOp, arch: Arch, wire: Tuple) -> SearchResult:
             shm_unlink(ref.shm_name)
 
 
+def _job_size_estimate(co: CompoundOp, arch: Arch, kw: Dict) -> int:
+    """Rough per-job cost proxy for size-aware chunk assignment: grid
+    points x topologies for exhaustive-bound jobs, the sampling budget
+    for randomized ones, the list length for candidates mode.  Only
+    relative order matters; any failure degrades to 1 (the job still
+    runs, it just gets no scheduling priority)."""
+    try:
+        cl = kw.get("candidate_list")
+        if cl is not None:
+            return len(cl)
+        if not set(kw) <= _SEARCH_KWARGS:
+            return 1
+        mode, cands, _obj = _plan_search(co, arch, kw)
+        if mode == "randomized":
+            return int(kw.get("budget", _SEARCH_DEFAULTS["budget"]))
+        return len(enumerate_topologies(co, cands)) * grid_size(co, cands)
+    except Exception:
+        return 1
+
+
+def _make_chunks(jobs: List[Tuple[CompoundOp, Arch, Dict]], chunksize: int,
+                 chunking: str) -> List[List[Tuple[int, Tuple]]]:
+    """Split ``jobs`` into chunks of ``(original_index, job)`` pairs.
+
+    ``chunking='size'`` (default) orders jobs by estimated space size and
+    assigns them longest-first round-robin across the chunks, so a single
+    ~117k-point exhaustive job starts immediately instead of serializing
+    behind a chunk of tiny ones (ROADMAP: job costs vary by ~100x when
+    randomized cells sit next to tiny exhaustive cells).
+    ``chunking='contiguous'`` keeps the pre-PR-5 contiguous slices.
+    Either way results are reassembled in job order and each job's
+    evaluation is untouched, so the executor bit-identity contract holds.
+    """
+    n_chunks = max(1, math.ceil(len(jobs) / chunksize))
+    indexed = list(enumerate(jobs))
+    if chunking == "contiguous":
+        return [indexed[i:i + chunksize]
+                for i in range(0, len(indexed), chunksize)]
+    if chunking != "size":
+        raise ValueError(f"unknown chunking mode {chunking!r}")
+    sizes = [_job_size_estimate(co, arch, kw) for co, arch, kw in jobs]
+    order = sorted(range(len(jobs)), key=lambda i: (-sizes[i], i))
+    chunks = [[indexed[i] for i in order[c::n_chunks]]
+              for c in range(n_chunks)]
+    return [c for c in chunks if c]
+
+
 def _search_many_process(jobs: List[Tuple[CompoundOp, Arch, Dict]], *,
                          max_workers: Optional[int],
-                         chunksize: Optional[int]) -> List[SearchResult]:
+                         chunksize: Optional[int],
+                         chunking: str = "size") -> List[SearchResult]:
     """The process-pool sweep path: chunked job scheduling over a
     ``ProcessPoolExecutor`` with shared-memory grid transport.  Falls
     back — warning, never failing — to threads when the pool cannot be
@@ -696,7 +838,7 @@ def _search_many_process(jobs: List[Tuple[CompoundOp, Arch, Dict]], *,
         # ~4 chunks per worker: coarse enough to amortize per-chunk
         # dispatch and per-worker cache warmup, fine enough to balance.
         chunksize = max(1, math.ceil(len(jobs) / (workers * 4)))
-    chunks = [jobs[i:i + chunksize] for i in range(0, len(jobs), chunksize)]
+    chunks = _make_chunks(jobs, chunksize, chunking)
     try:
         pool = ProcessPoolExecutor(max_workers=max_workers)
     except (OSError, PermissionError, ImportError) as e:
@@ -705,7 +847,8 @@ def _search_many_process(jobs: List[Tuple[CompoundOp, Arch, Dict]], *,
             "to threads", RuntimeWarning, stacklevel=3)
         return parallel_map(_run_search_job, jobs, max_workers=max_workers,
                             executor="thread")
-    results: List[SearchResult] = []
+    results: List[Optional[SearchResult]] = [None] * len(jobs)
+    done = 0
     broken: Optional[BaseException] = None
     try:
         with pool:
@@ -725,7 +868,8 @@ def _search_many_process(jobs: List[Tuple[CompoundOp, Arch, Dict]], *,
                     c = chunks[submitted]
                     pending.append(
                         (c, pool.submit(_run_search_chunk,
-                                        (prefix, use_shm, c))))
+                                        (prefix, use_shm,
+                                         [job for _i, job in c]))))
                     submitted += 1
 
             refill()
@@ -739,14 +883,17 @@ def _search_many_process(jobs: List[Tuple[CompoundOp, Arch, Dict]], *,
                         f.cancel()
                     break
                 refill()        # keep workers busy during the reduction
-                for (co, arch, _kw), wire in zip(chunk, wires):
-                    results.append(_finish_wire(co, arch, wire))
+                for (idx, (co, arch, _kw)), wire in zip(chunk, wires):
+                    results[idx] = _finish_wire(co, arch, wire)
+                    done += 1
         if broken is not None:
             warnings.warn(
-                f"search_many: worker pool broke after {len(results)}/"
+                f"search_many: worker pool broke after {done}/"
                 f"{len(jobs)} jobs ({broken!r}); finishing remaining jobs "
                 "serially", RuntimeWarning, stacklevel=3)
-            results.extend(_run_search_job(j) for j in jobs[len(results):])
+            for i, job in enumerate(jobs):
+                if results[i] is None:
+                    results[i] = _run_search_job(job)
     finally:
         # Reclaims segments orphaned by a crashed worker (their refs
         # never arrived) or dropped mid-delivery; finds nothing on the
@@ -758,7 +905,8 @@ def _search_many_process(jobs: List[Tuple[CompoundOp, Arch, Dict]], *,
 def search_many(jobs: Sequence, *,
                 max_workers: Optional[int] = None,
                 executor: str = "auto",
-                chunksize: Optional[int] = None) -> List[SearchResult]:
+                chunksize: Optional[int] = None,
+                chunking: str = "size") -> List[SearchResult]:
     """Parallel sweep driver: run many independent searches concurrently.
 
     Each job is ``(co, arch)``, ``(co, arch, kwargs)`` or a dict with
@@ -774,7 +922,16 @@ def search_many(jobs: Sequence, *,
     supports shared memory, else ``'thread'``.  Used by
     ``benchmarks/paper_tables.py`` and friends to fan out
     (workload, arch, variant) cells.
+
+    ``chunking`` selects how jobs map to process-pool chunks:
+    ``'size'`` (default) estimates each job's space size and assigns
+    longest-first round-robin so one huge exhaustive job cannot
+    serialize behind a chunk of tiny ones; ``'contiguous'`` slices jobs
+    in order.  Chunk assignment never changes any result — only
+    scheduling (results are reassembled in job order either way).
     """
+    if chunking not in ("size", "contiguous"):
+        raise ValueError(f"unknown chunking mode {chunking!r}")
     jobs = [_norm_job(j) for j in jobs]
     if executor == "auto":
         executor = ("process"
@@ -782,6 +939,6 @@ def search_many(jobs: Sequence, *,
                     else "thread")
     if executor == "process" and len(jobs) > 1:
         return _search_many_process(jobs, max_workers=max_workers,
-                                    chunksize=chunksize)
+                                    chunksize=chunksize, chunking=chunking)
     return parallel_map(_run_search_job, jobs, max_workers=max_workers,
                         executor=executor)

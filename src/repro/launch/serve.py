@@ -3,11 +3,19 @@
 Example (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \
         --requests 12 --batch 4 --prompt-len 32 --max-new 16
+
+Plan-cache wiring (the MappingPlan subsystem, ``repro.core.plan``):
+``--plan-cache DIR`` points the engine's plan store somewhere explicit
+(equivalent to ``REPRO_PLAN_CACHE=DIR``); ``--plan-bundle PATH`` imports
+a bundle exported by ``benchmarks/paper_tables.export_plans`` before the
+engine starts, so startup warmup is pure cache hits; ``--no-plan-warmup``
+skips the startup warmup sweep entirely.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -29,7 +37,22 @@ def main() -> None:
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--mesh", choices=["none", "host"], default="none")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="mapping-plan store directory "
+                         "(default: $REPRO_PLAN_CACHE or ~/.cache/repro-plans)")
+    ap.add_argument("--plan-bundle", default=None, metavar="PATH",
+                    help="import a plan bundle (paper_tables.export_plans) "
+                         "into the store before starting the engine")
+    ap.add_argument("--no-plan-warmup", action="store_true",
+                    help="skip the startup plan-warmup sweep")
     args = ap.parse_args()
+
+    if args.plan_cache:
+        os.environ["REPRO_PLAN_CACHE"] = args.plan_cache
+    imported = 0
+    if args.plan_bundle:
+        from repro.core.plan import get_plan_cache
+        imported = get_plan_cache().import_bundle(args.plan_bundle)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = Model(cfg)
@@ -44,7 +67,7 @@ def main() -> None:
             for i in range(args.requests)]
     eng = ServeEngine(model, params, batch_size=args.batch,
                       cache_len=args.cache_len, prompt_len=args.prompt_len,
-                      mesh=mesh)
+                      mesh=mesh, plan_warmup=not args.no_plan_warmup)
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
@@ -56,6 +79,10 @@ def main() -> None:
         "wall_s": round(dt, 2),
         "tok_per_s": round(n_tok / dt, 1),
         "decode_steps": eng.stats["decode_steps"],
+        "prefill_calls": eng.stats["prefill_calls"],
+        "plan_bundle_imported": imported,
+        "plan_warmup_solved": eng.stats.get("plan_warmup_solved", 0),
+        "plan_warmup_hits": eng.stats.get("plan_warmup_hits", 0),
     }))
 
 

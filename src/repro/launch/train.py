@@ -37,14 +37,36 @@ from repro.train.train_step import TrainState, make_train_step
 __all__ = ["train_loop", "main"]
 
 
+def warmup_kernel_plans(model: Model, seq: int) -> Dict[str, int]:
+    """Pre-solve the COMET block-selection plans the training step's
+    kernels will ask for (attention blocks at the training sequence
+    length, SSD chunk lengths) through the shared PlanCache, so tracing
+    the first step hits the store instead of searching."""
+    from repro.core.plan import get_plan_cache
+    from repro.kernels.autotune import plan_jobs
+
+    cfg = model.cfg
+    shapes: Dict[str, Any] = {}
+    if not cfg.has_ssm or cfg.family == "hybrid":
+        shapes["attention_blocks"] = [(seq, seq, cfg.hd)]
+    if cfg.has_ssm:
+        shapes["ssd_chunk_len"] = [(seq, cfg.ssm_headdim, cfg.ssm_state)]
+    return get_plan_cache().warmup(plan_jobs(shapes))
+
+
 def train_loop(model: Model, *, steps: int, batch: int, seq: int,
                mesh=None, opt_cfg: Optional[OptConfig] = None,
                microbatches: int = 1, use_planner_loss: bool = False,
                ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                keep: int = 3, seed: int = 0,
-               log_every: int = 10) -> Dict[str, Any]:
+               log_every: int = 10,
+               warmup_plans: bool = False) -> Dict[str, Any]:
     cfg = model.cfg
     opt_cfg = opt_cfg or OptConfig(total_steps=steps)
+    if warmup_plans:
+        ws = warmup_kernel_plans(model, seq)
+        print(f"[train] plan warmup: {ws['solved']} solved, "
+              f"{ws['hits']} already cached")
     data = SyntheticLM(cfg.vocab_size, seq, batch, seed=seed,
                        encdec=cfg.is_encdec, d_model=cfg.d_model,
                        enc_ratio=cfg.enc_ratio)
@@ -126,8 +148,15 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--mesh", choices=["none", "host", "production",
                                        "production-multi"], default="none")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="mapping-plan store directory "
+                         "(default: $REPRO_PLAN_CACHE or ~/.cache/repro-plans)")
+    ap.add_argument("--warmup-plans", action="store_true",
+                    help="pre-solve kernel block-selection plans at startup")
     args = ap.parse_args()
 
+    if args.plan_cache:
+        os.environ["REPRO_PLAN_CACHE"] = args.plan_cache
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = Model(cfg)
     mesh = None
@@ -141,7 +170,8 @@ def main() -> None:
                           warmup_steps=max(1, args.steps // 10),
                           grad_compression=args.grad_compression),
         microbatches=args.microbatches, use_planner_loss=args.planner_loss,
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        warmup_plans=args.warmup_plans)
     print(json.dumps({"final_loss": out["final_loss"],
                       "wall_s": round(out["wall_s"], 1),
                       "steps": out["steps_done"]}))

@@ -232,7 +232,9 @@ def attn_train(cfg: ModelConfig, p, x, *, causal: bool = True) -> jax.Array:
 
 def init_attn_cache(cfg: ModelConfig, B: int, cache_len: int, dtype) -> Dict:
     """Fixed-shape cache.  Windowed layers use a ring buffer of width
-    min(window, cache_len); global layers use the full length."""
+    min(window, cache_len); global layers use the full length.  ``kpos``
+    is per-row (B, W): decode positions are per-slot so a serving engine
+    can re-prefill one slot while the others keep decoding."""
     if cfg.attn_type == "mla":
         return {
             "ckv": jnp.zeros((B, cache_len, cfg.kv_lora_rank), dtype),
@@ -242,7 +244,7 @@ def init_attn_cache(cfg: ModelConfig, B: int, cache_len: int, dtype) -> Dict:
     return {
         "k": jnp.zeros((B, W, cfg.n_kv_heads, cfg.hd), dtype),
         "v": jnp.zeros((B, W, cfg.n_kv_heads, cfg.hd), dtype),
-        "kpos": jnp.full((W,), -1, jnp.int32),
+        "kpos": jnp.full((B, W), -1, jnp.int32),
     }
 
 
@@ -266,37 +268,43 @@ def attn_prefill(cfg: ModelConfig, p, x) -> Tuple[jax.Array, Dict]:
         k_ring = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - W:])
         v_ring = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - W:])
         kpos = jnp.full((W,), -1, jnp.int32).at[slots].set(pos)
-        cache = {"k": k_ring, "v": v_ring, "kpos": kpos}
+        cache = {"k": k_ring, "v": v_ring,
+                 "kpos": jnp.broadcast_to(kpos, (B, W))}
     else:
         cache = {"k": k, "v": v,
-                 "kpos": jnp.arange(k.shape[1], dtype=jnp.int32)}
+                 "kpos": jnp.broadcast_to(
+                     jnp.arange(k.shape[1], dtype=jnp.int32),
+                     (B, k.shape[1]))}
     return o @ p["wo"], cache
 
 
 def attn_decode(cfg: ModelConfig, p, x, cache: Dict, pos: jax.Array
                 ) -> Tuple[jax.Array, Dict]:
-    """One-token decode.  x: (B, 1, d); pos: scalar int32 (current index)."""
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 or per-row
+    (B,) int32 (per-slot positions — continuous-batching engines
+    re-prefill individual slots, so rows may sit at different depths)."""
     if cfg.attn_type == "mla":
         return _mla_decode(cfg, p, x, cache, pos)
     B = x.shape[0]
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q, k1, v1 = _qkv(cfg, p, x, pos[None] if pos.ndim == 0 else pos)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q, k1, v1 = _qkv(cfg, p, x, pos[:, None])      # per-row RoPE positions
     W = cache["k"].shape[1]
     slot = pos % W
-    k = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
-    kpos = jax.lax.dynamic_update_slice(cache["kpos"], pos[None].astype(jnp.int32),
-                                        (slot,))
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, slot].set(k1[:, 0])
+    v = cache["v"].at[rows, slot].set(v1[:, 0])
+    kpos = cache["kpos"].at[rows, slot].set(pos)               # (B, W)
     scale = 1.0 / math.sqrt(hd)
     group = H // Hkv
     qg = q.astype(F32).reshape(B, Hkv, group, hd)              # grouped layout
     kf = k.astype(F32)
     vf = v.astype(F32)
     s = jnp.einsum("bhgd,bshd->bhgs", qg, kf) * scale
-    valid = (kpos >= 0) & (kpos <= pos)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
     if cfg.window:
-        valid = valid & (kpos > pos - cfg.window)
-    s = jnp.where(valid[None, None, None, :], s, NEG)
+        valid = valid & (kpos > (pos - cfg.window)[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG)
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", pr, vf).astype(x.dtype)
     o = o.reshape(B, 1, H * hd)
@@ -351,15 +359,18 @@ def _mla_train(cfg, p, x, *, return_cache: bool = False):
 
 def _mla_decode(cfg, p, x, cache, pos):
     """Absorbed MLA decode: attention runs in the latent (kv_lora) space —
-    the compressed cache is never decompressed (DeepSeek inference opt.)."""
+    the compressed cache is never decompressed (DeepSeek inference opt.).
+    ``pos`` may be scalar or per-row (B,) (per-slot decode depths)."""
     B = x.shape[0]
     H, dn, dr, dv = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    posv = pos[None] if pos.ndim == 0 else pos
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    posv = pos[:, None]                                        # (B,1)
     q_nope, q_rope = _mla_q(cfg, p, x, posv)                   # (B,1,H,*)
     ckv1, kr1 = _mla_kv_compress(cfg, p, x, posv)              # (B,1,kvr),(B,1,dr)
-    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv1, (0, pos, 0))
-    kr = jax.lax.dynamic_update_slice(cache["kr"], kr1, (0, pos, 0))
+    rows = jnp.arange(B)
+    ckv = cache["ckv"].at[rows, pos].set(ckv1[:, 0])
+    kr = cache["kr"].at[rows, pos].set(kr1[:, 0])
     S = ckv.shape[1]
     wuk = p["wuk"].reshape(kvr, H, dn)
     # absorb: q_lat[b,h,:] = W_uk[:,h,:] @ q_nope[b,h,:]
@@ -369,8 +380,8 @@ def _mla_decode(cfg, p, x, cache, pos):
     s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(F32),
                        kr.astype(F32))
     s = s * (1.0 / math.sqrt(dn + dr))
-    mask = jnp.arange(S) <= pos
-    s = jnp.where(mask[None, None, :], s, NEG)
+    mask = jnp.arange(S)[None, :] <= pos[:, None]              # (B, S)
+    s = jnp.where(mask[:, None, :], s, NEG)
     pr = jax.nn.softmax(s, axis=-1)
     ctx_lat = jnp.einsum("bhs,bsk->bhk", pr, ckv.astype(F32))  # (B,H,kvr)
     wuv = p["wuv"].reshape(kvr, H, dv)

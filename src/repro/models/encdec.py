@@ -102,7 +102,7 @@ def encdec_init_cache(cfg: ModelConfig, B: int, cache_len: int) -> Dict:
                "v": jnp.zeros((B, Se, cfg.n_kv_heads, cfg.hd), dt)}
     stack = lambda c: jax.tree.map(
         lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), c)
-    return {"pos": jnp.zeros((), jnp.int32), "self": stack(self_c),
+    return {"pos": jnp.zeros((B,), jnp.int32), "self": stack(self_c),
             "cross": stack(cross_c)}
 
 
@@ -127,13 +127,20 @@ def encdec_prefill(cfg: ModelConfig, params: Dict, src_embeds: jax.Array,
 
     x, caches = jax.lax.scan(body, x, params["dec_layers"])
     pad = cache_len - S
-    self_c = jax.tree.map(
-        lambda a: jnp.pad(a, [(0, 0)] * 2 + [(0, pad)] + [(0, 0)] * (a.ndim - 3))
-        if a.ndim >= 3 else jnp.pad(a, [(0, 0), (0, pad)], constant_values=-1),
-        caches["self"])
+
+    def grow(a):
+        # stacked self-attn leaves: k/v (L, B, S, H, hd) and the per-row
+        # kpos (L, B, S) both pad the sequence axis 2; int32 leaves are
+        # position indices padded with -1 (= empty slot), not 0.
+        widths = [(0, 0)] * 2 + [(0, pad)] + [(0, 0)] * (a.ndim - 3)
+        if a.dtype == jnp.int32:
+            return jnp.pad(a, widths, constant_values=-1)
+        return jnp.pad(a, widths)
+
+    self_c = jax.tree.map(grow, caches["self"])
     x = apply_norm(cfg, params["final_norm"], x[:, -1:, :])
     logits = unembed_apply(cfg, params, x)
-    return logits, {"pos": jnp.array(S, jnp.int32), "self": self_c,
+    return logits, {"pos": jnp.full((B,), S, jnp.int32), "self": self_c,
                     "cross": caches["cross"]}
 
 
@@ -141,7 +148,9 @@ def encdec_decode(cfg: ModelConfig, params: Dict, cache: Dict,
                   tokens: jax.Array, mesh: Optional[Mesh] = None
                   ) -> Tuple[jax.Array, Dict]:
     dp = dp_axes(mesh)
-    pos = cache["pos"]
+    # scalar or per-row (B,) positions — see transformer.decode
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32),
+                           (tokens.shape[0],))
     x = embed_apply(params, tokens).astype(jnp.dtype(cfg.dtype))
 
     def body(carry, xs):

@@ -183,7 +183,9 @@ def _stack_cache(cache: Dict, L: int) -> Dict:
 
 def init_cache(cfg: ModelConfig, B: int, cache_len: int) -> Dict:
     dt = jnp.dtype(cfg.dtype)
-    out: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    # per-row positions from the start (see decode): the cache keeps one
+    # shape whether or not a serving engine ever staggers its slots
+    out: Dict[str, Any] = {"pos": jnp.zeros((B,), jnp.int32)}
     n_moe = cfg.n_layers - cfg.first_dense_layers
     if cfg.first_dense_layers > 0:
         out["dense"] = _stack_cache(
@@ -247,7 +249,7 @@ def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array,
     dp = dp_axes(mesh)
     x = embed_apply(params, tokens).astype(jnp.dtype(cfg.dtype))
     x = constrain(x, mesh, P(dp if dp else None, None, None))
-    cache: Dict[str, Any] = {"pos": jnp.array(S, jnp.int32)}
+    cache: Dict[str, Any] = {"pos": jnp.full((B,), S, jnp.int32)}
     if cfg.first_dense_layers > 0:
         x, cd = _scan_prefill(cfg.with_(n_experts=0), mesh, False, x,
                               params["dense_layers"])
@@ -289,7 +291,7 @@ def _pad_cache(cfg: ModelConfig, c: Dict, S: int, cache_len: int) -> Dict:
             W = min(cfg.window, cache_len) if cfg.window else cache_len
             ac["k"] = pad_leaf(ac["k"], W, 2)
             ac["v"] = pad_leaf(ac["v"], W, 2)
-            ac["kpos"] = pad_leaf(ac["kpos"], W, 1)
+            ac["kpos"] = pad_leaf(ac["kpos"], W, 2)    # (L, B, W) per-row
         out["attn"] = ac
     return out
 
@@ -322,9 +324,16 @@ def _layer_decode(cfg, mesh, use_moe, x, pl, cl, pos):
 
 def decode(cfg: ModelConfig, params: Dict, cache: Dict, tokens: jax.Array,
            mesh: Optional[Mesh] = None) -> Tuple[jax.Array, Dict]:
-    """One decode step.  tokens: (B, 1) -> (logits (B, 1, Vp), new cache)."""
+    """One decode step.  tokens: (B, 1) -> (logits (B, 1, Vp), new cache).
+
+    ``cache['pos']`` may be a scalar (every row at the same depth — the
+    plain prefill-then-decode flow) or a per-row (B,) vector (continuous
+    batching: a serving engine re-prefilled some slots mid-decode).  It
+    is normalized to (B,) here so attention layers always see per-row
+    positions."""
     dp = dp_axes(mesh)
-    pos = cache["pos"]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32),
+                           (tokens.shape[0],))
     x = embed_apply(params, tokens).astype(jnp.dtype(cfg.dtype))
     x = constrain(x, mesh, P(dp if dp else None, None, None))
     new_cache: Dict[str, Any] = {"pos": pos + 1}

@@ -1,7 +1,23 @@
 """Batched serving engine: prefill + greedy decode with fixed-shape jitted
 steps and slot-based continuous batching (finished sequences are replaced
 from the request queue without recompiling — the decode step shape never
-changes)."""
+changes).
+
+Continuous batching is *correct* continuous batching: when a slot frees
+mid-decode, the request that takes it over is **re-prefilled** — all slots
+refilled in the same step share one batched prefill call — and its rows of
+the KV cache, per-slot position vector and last-token vector are spliced
+in while the other slots keep decoding undisturbed.  (The per-slot
+positions come from the model layer: ``cache['pos']`` is a (B,) vector and
+attention masks/RoPE are per-row, so a freshly prefilled slot decodes
+exactly as it would in a batch of its own.)
+
+Startup also **warms the mapping-plan cache** (`repro.core.plan`): the
+engine pre-solves the COMET block-selection plans for its prefill and
+decode kernel shapes through ``PlanCache.warmup``, so the first traced
+kernel finds its plan already on disk instead of running a search inside
+the trace.
+"""
 from __future__ import annotations
 
 import time
@@ -34,7 +50,8 @@ class ServeEngine:
 
     def __init__(self, model: Model, params, *, batch_size: int,
                  cache_len: int, prompt_len: int,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 plan_warmup: bool = True):
         self.model = model
         self.params = params
         self.mesh = mesh
@@ -50,14 +67,100 @@ class ServeEngine:
             donate_argnums=(1,))
         self.stats: Dict[str, float] = {"prefill_calls": 0, "decode_steps": 0,
                                         "tokens_out": 0}
+        if plan_warmup:
+            self.warm_plans()
+
+    # ------------------------------------------------------------- plans
+    def plan_shapes(self) -> Dict[str, List]:
+        """The kernel shapes this engine's prefill/decode steps can ask
+        the autotuner for (``PAPER_KERNEL_SHAPES``-style table): the
+        prefill self-attention block (prompt_len x prompt_len), the
+        decode block over the full cache (1 x cache_len — the CPU decode
+        path uses dense einsums, but a kernelized flash-decoding backend
+        asks for exactly this shape, so the plan is pre-solved either
+        way), and — for SSD families — the chunk-length sweep for the
+        prompt length."""
+        cfg = self.model.cfg
+        shapes: Dict[str, List] = {}
+        if not cfg.has_ssm or cfg.family == "hybrid":
+            shapes["attention_blocks"] = [
+                (self.prompt_len, self.prompt_len, cfg.hd),   # prefill
+                (1, self.cache_len, cfg.hd),                  # decode
+            ]
+        if cfg.has_ssm:
+            shapes["ssd_chunk_len"] = [
+                (self.prompt_len, cfg.ssm_headdim, cfg.ssm_state)]
+        return shapes
+
+    def warm_plans(self) -> Dict[str, int]:
+        """Pre-solve the block-selection plans for this engine's kernel
+        shapes in one ``search_many`` sweep and persist them (PlanCache
+        disk store), so neither this process nor any later one re-solves
+        at trace time."""
+        from ..kernels.autotune import plan_jobs
+        from ..core.plan import get_plan_cache
+
+        t0 = time.time()
+        stats = get_plan_cache().warmup(plan_jobs(self.plan_shapes()))
+        self.stats["plan_warmup_hits"] = stats["hits"]
+        self.stats["plan_warmup_solved"] = stats["solved"]
+        self.stats["plan_warmup_s"] = time.time() - t0
+        return stats
 
     # ------------------------------------------------------------- serving
-    def _pad_prompts(self, reqs: Sequence[Request]) -> np.ndarray:
+    def _pad_prompts(self, rows: Sequence[Optional[Request]]) -> np.ndarray:
+        """(B, prompt_len) token rows, right-aligned; ``None`` rows (empty
+        or not-being-refilled slots) stay zero."""
         toks = np.zeros((self.B, self.prompt_len), np.int32)
-        for i, r in enumerate(reqs):
+        for i, r in enumerate(rows):
+            if r is None:
+                continue
             t = r.prompt[-self.prompt_len:]
             toks[i, -len(t):] = t          # right-aligned
         return toks
+
+    def _prefill_batch(self, rows: Sequence[Optional[Request]]):
+        """One batched prefill over ``rows`` (None rows carry zeros).
+        Returns (last-token vector, cache with per-slot positions)."""
+        batch = {"tokens": jnp.asarray(self._pad_prompts(rows))}
+        if self.model.cfg.is_encdec:
+            Se = max(1, self.prompt_len // self.model.cfg.enc_ratio)
+            batch["src_embeds"] = jnp.zeros(
+                (self.B, Se, self.model.cfg.d_model), jnp.float32)
+        logits, cache = self._prefill(self.params, batch)
+        self.stats["prefill_calls"] += 1
+        last = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)
+        cache = dict(cache)
+        # per-slot decode positions from the start: the merged cache keeps
+        # one compiled decode shape whether or not slots ever diverge
+        cache["pos"] = jnp.broadcast_to(
+            jnp.asarray(cache["pos"], jnp.int32), (self.B,))
+        return last, cache
+
+    def _refill_prefill(self, active: Sequence[Optional[Request]],
+                        idxs: List[int], cache, last):
+        """Prefill the newly refilled slots (one batched call however many
+        freed this step) and splice their rows — KV/state cache, position,
+        last token — into the live decode state."""
+        rows = [r if i in idxs else None for i, r in enumerate(active)]
+        fresh_last, fresh = self._prefill_batch(rows)
+        if cache is None:                  # initial fill: take it wholesale
+            return fresh_last, fresh
+        sel = np.zeros(self.B, dtype=bool)
+        sel[idxs] = True
+        selj = jnp.asarray(sel)
+
+        def splice(old, new):
+            # stacked cache leaves are (L, B, ...): batch axis 1
+            shape = [1] * old.ndim
+            shape[1] = self.B
+            return jnp.where(selj.reshape(shape), new, old)
+
+        merged = {"pos": jnp.where(selj, fresh["pos"], cache["pos"])}
+        for key in cache:
+            if key != "pos":
+                merged[key] = jax.tree.map(splice, cache[key], fresh[key])
+        return jnp.where(selj, fresh_last, last), merged
 
     def run(self, requests: List[Request], *, max_steps: int = 10_000
             ) -> List[Request]:
@@ -65,24 +168,15 @@ class ServeEngine:
         queue = list(requests)
         active: List[Optional[Request]] = [None] * self.B
 
-        def refill() -> bool:
-            changed = False
+        def refill() -> List[int]:
+            new = []
             for i in range(self.B):
                 if active[i] is None and queue:
                     active[i] = queue.pop(0)
-                    changed = True
-            return changed
+                    new.append(i)
+            return new
 
-        refill()
-        batch = {"tokens": jnp.asarray(self._pad_prompts(
-            [r for r in active if r] + []))}
-        if self.model.cfg.is_encdec:
-            Se = max(1, self.prompt_len // self.model.cfg.enc_ratio)
-            batch["src_embeds"] = jnp.zeros((self.B, Se, self.model.cfg.d_model),
-                                            jnp.float32)
-        logits, cache = self._prefill(self.params, batch)
-        self.stats["prefill_calls"] += 1
-        last = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)
+        last, cache = self._refill_prefill(active, refill(), None, None)
 
         for step in range(max_steps):
             if all(r is None or r.done for r in active) and not queue:
@@ -101,6 +195,9 @@ class ServeEngine:
                         (r.eos_id is not None and host[i] == r.eos_id):
                     r.done = True
                     active[i] = None       # slot freed (continuous batching)
-            refill()
-        done = [r for r in requests]
-        return done
+            new = refill()
+            if new:
+                # the bug this fixes: refilled slots used to inherit the
+                # previous occupant's KV cache and last token
+                last, cache = self._refill_prefill(active, new, cache, last)
+        return [r for r in requests]

@@ -1,0 +1,25 @@
+"""Shared test fixtures.
+
+The plan store (repro.core.plan) defaults to ``~/.cache/repro-plans``;
+tests must never leak files there, so the whole session is pointed at a
+throwaway directory unless the environment already pins one (the CI
+workflow sets ``REPRO_PLAN_CACHE`` explicitly and asserts nothing lands
+outside it).
+"""
+import os
+import tempfile
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _plan_cache_tmpdir():
+    if os.environ.get("REPRO_PLAN_CACHE"):
+        yield
+        return
+    with tempfile.TemporaryDirectory(prefix="repro-plans-test-") as d:
+        os.environ["REPRO_PLAN_CACHE"] = d
+        try:
+            yield
+        finally:
+            os.environ.pop("REPRO_PLAN_CACHE", None)

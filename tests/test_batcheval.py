@@ -491,14 +491,17 @@ def test_parallel_map_broken_pool_falls_back_serial(monkeypatch):
 # -------------------------------------------------- autotune integration
 
 def test_autotune_uses_shared_engine():
-    """Block selection routes through the batched evaluator (no local
-    mini cost models) and still respects the kernel VMEM constraints."""
+    """Block selection routes through the shared search engine via the
+    PlanCache (no local mini cost models, no per-process lru_cache) and
+    still respects the kernel VMEM constraints."""
     import inspect
 
     from repro.kernels import autotune
 
     src = inspect.getsource(autotune)
-    assert "evaluate_specs_batch" in src
+    assert "get_plan_cache" in src             # PlanCache-resolved
+    assert "candidate_list" in src             # shared candidates-mode search
+    assert "lru_cache" not in src              # result caching = PlanCache
     assert "systolic_gemm_cycles" not in src   # the old mini-model hook
     bq, bk = autotune.attention_blocks(1024, 1024, 64)
     assert bq % 128 == 0 and bk % 128 == 0

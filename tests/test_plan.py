@@ -1,0 +1,405 @@
+"""MappingPlan subsystem tests (core/plan.py + the autotune refactor).
+
+Covers: JSON roundtrip, memory/disk hit vs miss accounting, engine-version
+invalidation, corrupted-file tolerance, concurrent-writer atomicity, plan
+bundles, the no-search warm-process property for every paper-table kernel
+shape, autotune parity against the pre-refactor algorithm, and the
+ServeEngine startup warmup.
+"""
+import json
+import math
+import threading
+
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.hardware import edge
+from repro.core.ir import MappingSpec
+from repro.core.plan import MappingPlan, PlanCache, get_plan_cache
+from repro.core.workload import gemm_softmax
+
+CO = lambda: gemm_softmax(256, 1024, 64)
+
+
+def _mk(tmp_path, name="plans"):
+    return PlanCache(str(tmp_path / name))
+
+
+# ------------------------------------------------------------- roundtrip
+
+
+def test_plan_json_roundtrip(tmp_path):
+    cache = _mk(tmp_path)
+    plan = cache.resolve(CO(), edge())
+    blob = json.dumps(plan.to_json())
+    assert MappingPlan.from_json(json.loads(blob)) == plan
+
+
+def test_plan_roundtrip_candidates_mode(tmp_path):
+    cache = _mk(tmp_path)
+    cl = [MappingSpec(variant="fused_dist", m_tiles=m) for m in (1, 2, 4)]
+    plan = cache.resolve(CO(), edge(), candidate_list=cl)
+    assert plan.search_mode == "candidates"
+    assert plan.best_index is not None
+    rt = MappingPlan.from_json(json.loads(json.dumps(plan.to_json())))
+    assert rt == plan and rt.spec == cl[plan.best_index]
+
+
+# ----------------------------------------------------------- hit / miss
+
+
+def test_memory_and_disk_hits(tmp_path):
+    cache = _mk(tmp_path)
+    co, arch = CO(), edge()
+    p1 = cache.resolve(co, arch)
+    assert cache.stats["misses"] == 1 and cache.stats["stores"] == 1
+    p2 = cache.resolve(co, arch)
+    assert p2 is p1 and cache.stats["hits_mem"] == 1
+    # a fresh instance over the same directory = a second process
+    other = PlanCache(str(tmp_path / "plans"))
+    p3 = other.resolve(co, arch)
+    assert p3 == p1
+    assert other.stats["hits_disk"] == 1 and other.stats["misses"] == 0
+
+
+def test_distinct_search_kwargs_are_distinct_plans(tmp_path):
+    cache = _mk(tmp_path)
+    co, arch = CO(), edge()
+    lat = cache.resolve(co, arch, objective="latency")
+    en = cache.resolve(co, arch, objective="energy")
+    assert cache.stats["misses"] == 2
+    assert en.energy_pj <= lat.energy_pj
+
+
+def test_version_bump_invalidates(tmp_path, monkeypatch):
+    cache = _mk(tmp_path)
+    co, arch = CO(), edge()
+    cache.resolve(co, arch)
+    monkeypatch.setattr(plan_mod, "ENGINE_VERSION", plan_mod.ENGINE_VERSION + 1)
+    fresh = PlanCache(str(tmp_path / "plans"))
+    assert fresh.lookup(co, arch) is None          # old plan invisible
+    p2 = fresh.resolve(co, arch)                   # re-solves + persists
+    assert fresh.stats["misses"] == 1
+    assert p2.engine_version == plan_mod.ENGINE_VERSION
+
+
+# ------------------------------------------------------------ durability
+
+
+def test_corrupted_file_warns_and_resolves(tmp_path):
+    cache = _mk(tmp_path)
+    co, arch = CO(), edge()
+    p1 = cache.resolve(co, arch)
+    path = cache._path(cache.key(co, arch, {}))
+    path.write_text("{ not json !")
+    fresh = PlanCache(str(tmp_path / "plans"))
+    with pytest.warns(RuntimeWarning, match="corrupted plan file"):
+        p2 = fresh.resolve(co, arch)
+    assert p2 == p1 and fresh.stats["corrupt"] == 1
+    # the re-solve overwrote the corrupted file with valid JSON
+    assert json.loads(path.read_text())["plan"]["latency_s"] == p1.latency_s
+
+
+def test_wrong_key_payload_treated_as_miss(tmp_path):
+    cache = _mk(tmp_path)
+    co, arch = CO(), edge()
+    p1 = cache.resolve(co, arch)
+    path = cache._path(cache.key(co, arch, {}))
+    blob = json.loads(path.read_text())
+    blob["key"][0] = "0" * 16                       # forged arch signature
+    path.write_text(json.dumps(blob))
+    fresh = PlanCache(str(tmp_path / "plans"))
+    with pytest.warns(RuntimeWarning, match="corrupted plan file"):
+        assert fresh.resolve(co, arch) == p1
+
+
+def test_unwritable_store_degrades_to_memory(tmp_path):
+    blocker = tmp_path / "blocked"
+    blocker.write_text("a file where the store dir should go")
+    cache = PlanCache(str(blocker / "plans"))
+    with pytest.warns(RuntimeWarning, match="memory-only"):
+        plan = cache.resolve(CO(), edge())
+    assert plan.latency_s > 0
+    assert cache.resolve(CO(), edge()) is plan     # memory layer still works
+
+
+def test_concurrent_writers_atomic(tmp_path):
+    """Many writers racing on the same key: every resolve returns the
+    same plan and the final file is valid, complete JSON."""
+    co, arch = CO(), edge()
+    results, errors = [], []
+
+    def worker():
+        try:
+            # separate instances: no shared in-memory layer, all hit disk
+            results.append(PlanCache(str(tmp_path / "plans")).resolve(co, arch))
+        except BaseException as e:   # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert all(r == results[0] for r in results)
+    cache = PlanCache(str(tmp_path / "plans"))
+    path = cache._path(cache.key(co, arch, {}))
+    blob = json.loads(path.read_text())            # parses => not partial
+    assert MappingPlan.from_json(blob["plan"]) == results[0]
+    assert not list(path.parent.glob("*.tmp"))     # no temp-file litter
+
+
+# --------------------------------------------------------------- bundles
+
+
+def test_bundle_export_import(tmp_path):
+    src = _mk(tmp_path, "src")
+    co, arch = CO(), edge()
+    plan = src.resolve(co, arch)
+    bundle = tmp_path / "bundle.json"
+    assert src.export_bundle(bundle) == 1
+    dst = _mk(tmp_path, "dst")
+    assert dst.import_bundle(bundle) == 1
+    assert dst.lookup(co, arch) == plan
+    # and the import persisted: a later instance hits disk
+    assert PlanCache(str(tmp_path / "dst")).lookup(co, arch) == plan
+
+
+def test_bundle_version_mismatch_skipped(tmp_path, monkeypatch):
+    src = _mk(tmp_path, "src")
+    src.resolve(CO(), edge())
+    bundle = tmp_path / "bundle.json"
+    src.export_bundle(bundle)
+    monkeypatch.setattr(plan_mod, "ENGINE_VERSION", plan_mod.ENGINE_VERSION + 1)
+    dst = _mk(tmp_path, "dst")
+    assert dst.import_bundle(bundle) == 0
+
+
+def test_get_plan_cache_follows_env(tmp_path, monkeypatch):
+    a, b = tmp_path / "a", tmp_path / "b"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(a))
+    ca = get_plan_cache()
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(b))
+    cb = get_plan_cache()
+    assert ca is not cb and ca.root == a and cb.root == b
+    assert get_plan_cache() is cb
+
+
+# ------------------------------------- warm process answers without search
+
+
+def test_warm_disk_cache_answers_all_paper_kernel_shapes_without_search(
+        tmp_path, monkeypatch):
+    """Acceptance gate: after one process warms the disk store, a second
+    process (fresh PlanCache instances, empty in-memory layer) answers
+    every paper-table kernel shape without ever invoking search()."""
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    warm = {}
+    for sq, skv, d in autotune.PAPER_KERNEL_SHAPES["attention_blocks"]:
+        warm[("a", sq, skv, d)] = autotune.attention_blocks(sq, skv, d)
+    for m, n, k in autotune.PAPER_KERNEL_SHAPES["gemm_epilogue_blocks"]:
+        warm[("g", m, n, k)] = autotune.gemm_epilogue_blocks(m, n, k)
+    for s, p, n in autotune.PAPER_KERNEL_SHAPES["ssd_chunk_len"]:
+        warm[("s", s, p, n)] = autotune.ssd_chunk_len(s, p, n)
+
+    # "second process": drop every in-memory cache layer, then forbid the
+    # search engine outright
+    with plan_mod._CACHES_LOCK:
+        plan_mod._CACHES.clear()
+
+    def boom(*a, **kw):                            # pragma: no cover
+        raise AssertionError("search() ran despite a warm disk cache")
+
+    monkeypatch.setattr(plan_mod, "search", boom)
+    monkeypatch.setattr(plan_mod, "search_many", boom)
+
+    for sq, skv, d in autotune.PAPER_KERNEL_SHAPES["attention_blocks"]:
+        assert autotune.attention_blocks(sq, skv, d) == warm[("a", sq, skv, d)]
+    for m, n, k in autotune.PAPER_KERNEL_SHAPES["gemm_epilogue_blocks"]:
+        assert autotune.gemm_epilogue_blocks(m, n, k) == warm[("g", m, n, k)]
+    for s, p, n in autotune.PAPER_KERNEL_SHAPES["ssd_chunk_len"]:
+        assert autotune.ssd_chunk_len(s, p, n) == warm[("s", s, p, n)]
+
+
+def test_resolve_counts_solves_once_across_calls(tmp_path, monkeypatch):
+    calls = []
+    real = plan_mod.search
+
+    def counting(*a, **kw):
+        calls.append(a)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(plan_mod, "search", counting)
+    cache = _mk(tmp_path)
+    co, arch = CO(), edge()
+    for _ in range(5):
+        cache.resolve(co, arch)
+    assert len(calls) == 1
+
+
+# ------------------------------------------------------- autotune parity
+
+
+def _best_candidate_ref(br):
+    i = br.best_index("latency")
+    if i is not None:
+        return i
+    return min(range(br.size), key=lambda j: float(br.latency[j]))
+
+
+def _attention_blocks_ref(sq, skv, d):
+    """The pre-refactor attention_blocks (PR 1-4 algorithm): direct
+    evaluate_specs_batch over the schedule-duplicated candidate axes."""
+    from repro.core.batcheval import Topology, evaluate_specs_batch
+    from repro.core.workload import flash_attention
+    from repro.kernels.autotune import (SCHEDULES, VMEM_BUDGET, _LANE,
+                                        _kernel_arch)
+
+    arch = _kernel_arch()
+    cands = [128, 256, 512, 1024]
+    pairs = []
+    for bq in cands:
+        if bq > max(sq, _LANE):
+            continue
+        for bk in cands:
+            if bk > max(skv, _LANE):
+                continue
+            vmem = (bq * d * 2 + 2 * bk * d * 2 + bq * d * 4 + bq * bk * 4
+                    + 2 * bq * _LANE * 4)
+            if vmem * 2 > VMEM_BUDGET:
+                continue
+            pairs.append((bq, bk))
+    if not pairs:
+        return (_LANE, _LANE)
+    M, N = max(sq, _LANE), max(skv, _LANE)
+    co = flash_attention(M, d, N, d)
+    dup = lambda axis: [v for _ in SCHEDULES for v in axis]
+    br = evaluate_specs_batch(
+        co, arch, Topology(variant="fa"),
+        dup([math.ceil(M / bq) for bq, _ in pairs]),
+        [1] * (len(SCHEDULES) * len(pairs)),
+        dup([math.ceil(N / bk) for _, bk in pairs]),
+        schedule=[s for s in SCHEDULES for _ in range(len(pairs))])
+    return pairs[_best_candidate_ref(br) % len(pairs)]
+
+
+def _gemm_epilogue_blocks_ref(m, n, k):
+    from repro.core.batcheval import Topology, evaluate_specs_batch
+    from repro.kernels.autotune import (SCHEDULES, VMEM_BUDGET, _LANE,
+                                        _kernel_arch)
+
+    arch = _kernel_arch()
+    pairs = []
+    for bm in (128, 256, 512):
+        for bk in (128, 256, 512):
+            if bk > max(k, _LANE):
+                continue
+            vmem = bm * n * 4 + bk * n * 2 + bm * bk * 2 + bm * n * 2
+            if vmem * 2 > VMEM_BUDGET:
+                continue
+            pairs.append((bm, bk))
+    if not pairs:
+        return (_LANE, _LANE)
+    M, K = max(m, _LANE), max(k, _LANE)
+    co = gemm_softmax(M, n, K)
+    dup = lambda axis: [v for _ in SCHEDULES for v in axis]
+    br = evaluate_specs_batch(
+        co, arch, Topology(variant="fused_dist"),
+        dup([math.ceil(M / bm) for bm, _ in pairs]),
+        dup([math.ceil(K / bk) for _, bk in pairs]),
+        [1] * (len(SCHEDULES) * len(pairs)),
+        schedule=[s for s in SCHEDULES for _ in range(len(pairs))])
+    return pairs[_best_candidate_ref(br) % len(pairs)]
+
+
+def _ssd_chunk_len_ref(s, p, n):
+    from repro.core.ir import evaluate_mapping
+    from repro.core.workload import ssd_chunk
+    from repro.kernels.autotune import VMEM_BUDGET, _LANE, _kernel_arch
+
+    arch = _kernel_arch()
+    best = None
+    for c in (128, 256, 512):
+        if c > max(s, _LANE):
+            continue
+        vmem = (c * p * 2 * 2 + 2 * c * n * 2 + c * c * 4 + n * p * 4)
+        if vmem * 2 > VMEM_BUDGET:
+            continue
+        co = ssd_chunk(S=s, H=1, P=p, Dst=n, C=c)
+        r = evaluate_mapping(co, arch, MappingSpec(variant="fused_dist",
+                                                   m_tiles=1))
+        lat = math.ceil(max(s, 1) / c) * r.latency
+        if best is None or lat < best[0]:
+            best = (lat, c)
+    return 128 if best is None else best[1]
+
+
+@pytest.mark.parametrize("shape", [
+    (1024, 1024, 64), (4096, 4096, 128), (1, 32768, 128),
+    (32768, 32768, 128), (100, 100, 32), (192, 300, 64), (1, 1, 64)])
+def test_attention_blocks_parity(shape, tmp_path, monkeypatch):
+    from repro.kernels.autotune import attention_blocks
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    assert attention_blocks(*shape) == _attention_blocks_ref(*shape)
+
+
+@pytest.mark.parametrize("shape", [
+    (512, 4096, 128), (4096, 4096, 4096), (4096, 16384, 4096),
+    (128, 256, 64), (200, 1000, 96)])
+def test_gemm_epilogue_blocks_parity(shape, tmp_path, monkeypatch):
+    from repro.kernels.autotune import gemm_epilogue_blocks
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    assert gemm_epilogue_blocks(*shape) == _gemm_epilogue_blocks_ref(*shape)
+
+
+@pytest.mark.parametrize("shape", [
+    (4096, 64, 128), (128, 32, 64), (1024, 128, 256)])
+def test_ssd_chunk_len_parity(shape, tmp_path, monkeypatch):
+    from repro.kernels.autotune import ssd_chunk_len
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    assert ssd_chunk_len(*shape) == _ssd_chunk_len_ref(*shape)
+
+
+def test_autotune_has_no_lru_cache():
+    """Acceptance criterion: kernels/autotune.py has no functools
+    lru_cache left — result caching lives in the PlanCache."""
+    import inspect
+
+    from repro.kernels import autotune
+
+    src = inspect.getsource(autotune)
+    assert "lru_cache" not in src
+    assert "get_plan_cache" in src
+
+
+# ------------------------------------------------------ serve-engine warmup
+
+
+def test_serve_engine_warmup_populates_cache(tmp_path, monkeypatch):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.kernels.autotune import plan_jobs
+    from repro.models import Model
+    from repro.serve.engine import ServeEngine
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    cfg = get_smoke_config("glm4-9b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_size=2, cache_len=48,
+                      prompt_len=16)
+    assert eng.stats["plan_warmup_solved"] > 0
+    assert list((tmp_path / "plans").glob("*.json"))
+    # every decode/prefill shape is now answerable without solving
+    cache = get_plan_cache()
+    for co, arch, kw in plan_jobs(eng.plan_shapes()):
+        assert cache.lookup(co, arch, **kw) is not None
+    # a second engine over the same store warms from hits alone
+    eng2 = ServeEngine(model, params, batch_size=2, cache_len=48,
+                       prompt_len=16)
+    assert eng2.stats["plan_warmup_solved"] == 0
+    assert eng2.stats["plan_warmup_hits"] > 0

@@ -17,6 +17,7 @@ from repro.core.batcheval import (Topology, batch_from_shm, batch_to_shm,
                                   evaluate_specs_batch,
                                   evaluate_topology_grid, shm_unlink)
 from repro.core.hardware import cloud, edge
+from repro.core.ir import MappingSpec
 from repro.core.search import (candidate_specs, cleanup_shm_segments,
                                parallel_map, search_many)
 from repro.core.workload import attention, gemm_softmax
@@ -274,7 +275,7 @@ def test_auto_executor_thresholds(monkeypatch):
     process pool at the threshold (when shared memory works)."""
     calls = []
 
-    def _spy(jobs, *, max_workers, chunksize):
+    def _spy(jobs, *, max_workers, chunksize, chunking="size"):
         calls.append(len(jobs))
         return [search_mod._run_search_job(j) for j in jobs]
 
@@ -301,6 +302,51 @@ def test_unknown_kwargs_rejected_identically_across_executors():
         search_many(jobs, executor="serial")
     with pytest.raises(TypeError):
         search_many(jobs, executor="process")
+
+
+def test_make_chunks_size_aware_longest_first():
+    """Size-aware chunk assignment deals jobs longest-first round-robin:
+    the largest job opens the first chunk, every index appears exactly
+    once, and 'contiguous' reproduces plain slicing."""
+    from repro.core.search import _make_chunks, _norm_job
+
+    arch = edge()
+    small = gemm_softmax(256, 1024, 64)
+    # candidate_list sizes are the (exact) size estimate, so the ranking
+    # is fully deterministic
+    def job(n_specs):
+        return _norm_job((small, arch, {"candidate_list": [
+            MappingSpec(variant="fused_dist", m_tiles=1 + i)
+            for i in range(n_specs)]}))
+
+    jobs = [job(2), job(5), job(1), job(9), job(3), job(4), job(7)]
+    chunks = _make_chunks(jobs, 2, "size")
+    flat = sorted(i for c in chunks for i, _j in c)
+    assert flat == list(range(len(jobs)))          # a partition
+    assert chunks[0][0][0] == 3                    # 9-spec job leads chunk 0
+    # round-robin: second-largest (index 6, 7 specs) opens chunk 1
+    assert chunks[1][0][0] == 6
+    contig = _make_chunks(jobs, 2, "contiguous")
+    assert [[i for i, _j in c] for c in contig] == [[0, 1], [2, 3], [4, 5], [6]]
+    with pytest.raises(ValueError, match="chunking"):
+        _make_chunks(jobs, 2, "random")
+
+
+@shm_required
+def test_size_aware_chunking_bit_identical_results():
+    """chunking='size' must return the same ordered, bit-identical
+    results as chunking='contiguous' and the serial path."""
+    co, arch = gemm_softmax(256, 1024, 64), edge()
+    variants = ["unfused", "fused_epilogue", "fused_std", "fused_dist"] * 2
+    jobs = [(co, arch, {"variants": [v]}) for v in variants]
+    serial = search_many(jobs, executor="serial")
+    for mode in ("size", "contiguous"):
+        out = search_many(jobs, executor="process", chunksize=3,
+                          chunking=mode)
+        assert [r.best.spec.variant for r in out] == variants
+        assert all(a.latency == b.latency and a.best.spec == b.best.spec
+                   and a.evaluated == b.evaluated
+                   for a, b in zip(out, serial))
 
 
 @shm_required

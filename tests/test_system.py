@@ -38,11 +38,43 @@ def test_serve_engine_continuous_batching():
         0, cfg.vocab_size, size=12).astype(np.int32), max_new_tokens=5)
         for i in range(7)]                      # 7 requests through 3 slots
     eng = ServeEngine(model, params, batch_size=3, cache_len=48,
-                      prompt_len=16)
+                      prompt_len=16, plan_warmup=False)
     done = eng.run(reqs)
     assert all(len(r.output) == 5 for r in done)
     assert eng.stats["tokens_out"] == 35
-    assert eng.stats["prefill_calls"] == 1      # slots reused, no re-prefill
+    # slots are reused, but refilled slots ARE re-prefilled (batched per
+    # step): 7 requests through 3 slots in same-length waves = 3 prefills
+    assert eng.stats["prefill_calls"] == 3
+
+
+def test_serve_engine_refill_matches_serial_decoding():
+    """Regression for the continuous-batching bug: slots refilled
+    mid-decode used to inherit the previous occupant's KV cache and last
+    token (never prefilled).  With the queue exceeding batch_size, every
+    request's output must match decoding it alone through a 1-slot
+    engine."""
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_smoke_config("glm4-9b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+               for _ in range(7)]
+    # staggered lengths so slots free at different steps (un-batched
+    # refills as well as the same-step batched case)
+    new_tokens = [5, 3, 4, 6, 2, 5, 3]
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(prompts, new_tokens))]
+    eng = ServeEngine(model, params, batch_size=3, cache_len=48,
+                      prompt_len=16, plan_warmup=False)
+    eng.run(reqs)
+
+    one = ServeEngine(model, params, batch_size=1, cache_len=48,
+                      prompt_len=16, plan_warmup=False)
+    for i, (p, n) in enumerate(zip(prompts, new_tokens)):
+        ref = Request(rid=100 + i, prompt=p.copy(), max_new_tokens=n)
+        one.run([ref])
+        assert reqs[i].output == ref.output, f"request {i} diverged"
 
 
 def test_ssm_decode_equals_prefill_continuation():
