@@ -278,12 +278,17 @@ def export_plans(out_path: str = "PLANS_kernels.json") -> Dict:
 
     cache = get_plan_cache()
     t0 = time.time()
-    stats = cache.warmup(plan_jobs())
+    # tag the whole sweep as one provenance generation in the durable
+    # store ($REPRO_PLAN_SWEEP_ID overrides), so a fleet operator can
+    # later `invalidate(sweep_id=...)` or audit it via `store_stats()`
+    stats = cache.warmup(plan_jobs(), sweep_id="paper-tables-export")
     n = cache.export_bundle(out_path)
+    store = cache.store_stats()["store"]
     print(f"plan_bundle,{(time.time() - t0) * 1e6:.0f},"
           f"plans={n};solved={stats['solved']};hits={stats['hits']};"
-          f"wrote={out_path}")
-    return {"plans": n, **stats, "path": out_path}
+          f"store={store.get('backend')};wrote={out_path}")
+    return {"plans": n, **stats, "path": out_path,
+            "store_backend": store.get("backend")}
 
 
 def run_all() -> Dict:

@@ -34,12 +34,16 @@ mappings as persisted design points) so the loop closes:
   single-file plan bundles: a benchmark host exports its sweep, a serving
   host imports it and never solves at startup.
 
-Durability contract: disk writes are atomic (`os.replace` of a unique
-temp file), so concurrent writers race benignly (last writer wins, both
-wrote the same solution) and readers never observe partial JSON.  A
-corrupted or stale-version file is treated as a miss — warn, re-solve,
-overwrite.  A store directory that cannot be created or written demotes
-the cache to memory-only with a warning instead of failing the caller.
+Durability contract (see :mod:`repro.core.planstore` for the storage
+engine): the disk layer is a degradation ladder — a SQLite WAL store
+with LRU/age eviction, provenance and busy-retry, falling back to the
+legacy atomic-write JSON directory (auto-migrated into SQLite on first
+open) and finally to memory-only.  Concurrent writers race benignly
+(last writer wins, both wrote the same solution); readers never observe
+partial plans.  A corrupted or stale-version record is treated as a
+miss — warn, quarantine, re-solve, overwrite.  Any unrecoverable store
+fault demotes the cache down the ladder with **one** warning per cause
+instead of failing (or spamming) the caller.
 """
 from __future__ import annotations
 
@@ -47,16 +51,18 @@ import dataclasses
 import hashlib
 import json
 import os
-import tempfile
+import secrets
 import threading
 import warnings
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from . import planstore
 from .batcheval import co_signature
 from .hardware import Arch
 from .ir import MappingSpec
+from .planstore import PlanStore
 from .search import SearchResult, search, search_many
 from .workload import CompoundOp
 
@@ -226,22 +232,33 @@ PlanKey = Tuple[str, str, int, str]     # (arch_sig, op_sig, version, kw_sig)
 
 
 class PlanCache:
-    """Two-level plan cache: in-memory dict over an atomic-write JSON
-    directory store (``$REPRO_PLAN_CACHE`` or ``~/.cache/repro-plans``).
+    """Two-level plan cache: in-memory dict over a durable
+    :class:`~repro.core.planstore.PlanStore` (``$REPRO_PLAN_CACHE`` or
+    ``~/.cache/repro-plans``; SQLite WAL with JSON-dir and memory-only
+    fallbacks).
 
-    Thread-safe; process-safe through write atomicity (concurrent
-    resolvers of the same key each solve once and the last ``os.replace``
-    wins — both wrote the same plan).  ``stats`` counts memory/disk hits,
-    misses (solves), stores and corrupt files tolerated.
+    Thread-safe; process-safe through the store's write atomicity
+    (concurrent resolvers of the same key each solve once and the last
+    writer wins — both wrote the same plan).  ``stats`` counts
+    memory/disk hits, misses (solves), stores and corrupt records
+    tolerated; :meth:`store_stats` adds the store's own provenance view
+    (row counts, bytes, per-version/per-sweep breakdowns).
     """
 
-    def __init__(self, root: Optional[str] = None):
+    def __init__(self, root: Optional[str] = None, *,
+                 store: Optional[PlanStore] = None,
+                 backend: Optional[str] = None,
+                 max_bytes: Optional[int] = None,
+                 max_plans: Optional[int] = None,
+                 max_age_s: Optional[float] = None):
         if root is None:
             root = os.environ.get(_ENV_VAR) or DEFAULT_CACHE_DIR
         self.root = Path(root).expanduser()
+        self.store = store if store is not None else PlanStore(
+            self.root, backend=backend, max_bytes=max_bytes,
+            max_plans=max_plans, max_age_s=max_age_s)
         self._mem: Dict[PlanKey, MappingPlan] = {}
         self._lock = threading.Lock()
-        self._disk_ok: Optional[bool] = None    # probed on first store
         self.stats = {"hits_mem": 0, "hits_disk": 0, "misses": 0,
                       "stores": 0, "corrupt": 0}
 
@@ -251,30 +268,11 @@ class PlanCache:
         return (arch_fingerprint(arch), op_fingerprint(co), ENGINE_VERSION,
                 kw_fingerprint(search_kw))
 
-    def _path(self, key: PlanKey) -> Path:
-        arch_sig, op_sig, version, kw_sig = key
-        return self.root / f"{arch_sig}-{op_sig}-v{version}-{kw_sig}.json"
-
     # --------------------------------------------------------------- disk
 
-    def _ensure_dir(self) -> bool:
-        if self._disk_ok is None:
-            try:
-                self.root.mkdir(parents=True, exist_ok=True)
-                self._disk_ok = True
-            except OSError as e:
-                warnings.warn(
-                    f"PlanCache: cannot create store dir {self.root} "
-                    f"({e!r}); running memory-only", RuntimeWarning,
-                    stacklevel=3)
-                self._disk_ok = False
-        return self._disk_ok
-
     def _load_disk(self, key: PlanKey) -> Optional[MappingPlan]:
-        path = self._path(key)
-        try:
-            raw = path.read_text()
-        except OSError:
+        raw = self.store.get(key)
+        if raw is None:
             return None
         try:
             d = json.loads(raw)
@@ -286,37 +284,56 @@ class PlanCache:
             return plan
         except (ValueError, KeyError, TypeError) as e:
             self.stats["corrupt"] += 1
+            quarantined = self.store.discard(key)
             warnings.warn(
-                f"PlanCache: ignoring corrupted plan file {path} ({e!r}); "
-                "re-solving", RuntimeWarning, stacklevel=3)
+                f"PlanCache: ignoring corrupted stored plan {key} ({e!r}); "
+                + ("quarantined; " if quarantined else "") + "re-solving",
+                RuntimeWarning, stacklevel=3)
             return None
 
-    def _store_disk(self, key: PlanKey, plan: MappingPlan) -> None:
-        if not self._ensure_dir():
-            return
-        path = self._path(key)
+    def _store_disk(self, key: PlanKey, plan: MappingPlan,
+                    sweep_id: Optional[str] = None) -> None:
         payload = json.dumps({"key": list(key), "plan": plan.to_json()},
                              indent=1)
-        try:
-            fd, tmp = tempfile.mkstemp(dir=str(self.root),
-                                       prefix=path.stem + ".",
-                                       suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    f.write(payload)
-                os.replace(tmp, path)   # atomic: readers never see partials
-            except BaseException:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
-        except OSError as e:
-            warnings.warn(
-                f"PlanCache: could not persist plan to {path} ({e!r})",
-                RuntimeWarning, stacklevel=3)
-            return
-        self.stats["stores"] += 1
+        if self.store.put(key, payload, sweep_id=sweep_id):
+            self.stats["stores"] += 1
+
+    # -------------------------------------------------- store maintenance
+
+    def gc(self, **kw) -> Dict[str, int]:
+        """Run the store's garbage collection: age expiry plus LRU
+        eviction down to the (optionally overridden) size bounds, then
+        vacuum.  Returns ``{'expired': n, 'evicted': n}``."""
+        return self.store.gc(**kw)
+
+    def invalidate(self, *, engine_version: Optional[int] = None,
+                   sweep_id: Optional[str] = None,
+                   older_than_s: Optional[float] = None) -> int:
+        """Delete exactly the stored plans matching the provenance
+        filters (e.g. ``engine_version=4`` removes a stale generation
+        after a cost-model bump) and drop matching in-memory entries.
+        Returns the number of store rows removed."""
+        n = self.store.invalidate(engine_version=engine_version,
+                                  sweep_id=sweep_id,
+                                  older_than_s=older_than_s)
+        with self._lock:
+            if engine_version is not None and sweep_id is None \
+                    and older_than_s is None:
+                drop = [k for k in self._mem if k[2] == engine_version]
+            else:
+                # memory entries carry no sweep/created provenance: be
+                # conservative and drop everything (they re-load cheaply)
+                drop = list(self._mem)
+            for k in drop:
+                del self._mem[k]
+        return n
+
+    def store_stats(self) -> Dict:
+        """Cache counters plus the store's provenance/size view."""
+        with self._lock:
+            out = dict(self.stats, mem_plans=len(self._mem))
+        out["store"] = self.store.stats()
+        return out
 
     # ------------------------------------------------------------- lookup
 
@@ -348,26 +365,30 @@ class PlanCache:
         return self._admit(co, arch, search_kw, result)
 
     def _admit(self, co: CompoundOp, arch: Arch, search_kw: Dict,
-               result: SearchResult) -> MappingPlan:
+               result: SearchResult,
+               sweep_id: Optional[str] = None) -> MappingPlan:
         key = self.key(co, arch, search_kw)
         plan = MappingPlan.from_search(co, arch, result)
         with self._lock:
             self._mem[key] = plan
             self.stats["misses"] += 1
-        self._store_disk(key, plan)
+        self._store_disk(key, plan, sweep_id=sweep_id)
         return plan
 
     # ------------------------------------------------------------- warmup
 
     def warmup(self, jobs: Sequence, *,
                executor: str = "auto",
-               max_workers: Optional[int] = None) -> Dict[str, int]:
+               max_workers: Optional[int] = None,
+               sweep_id: Optional[str] = None) -> Dict[str, int]:
         """Pre-solve many plans in one sweep.  Each job is ``(co, arch)``,
         ``(co, arch, kwargs)`` or a ``co``/``arch`` dict (the
         :func:`repro.core.search.search_many` job forms).  Jobs already
         planned are skipped; the misses fan out through ``search_many``
         (size-aware process-pool chunking under ``executor='auto'``) and
-        every result is persisted.  Returns counts."""
+        every result is persisted with ``sweep_id`` provenance (an
+        auto-generated token when not given, so the whole warmup is
+        queryable/invalidatable as one generation).  Returns counts."""
         norm: List[Tuple[CompoundOp, Arch, Dict]] = []
         for job in jobs:
             if isinstance(job, dict):
@@ -387,22 +408,41 @@ class PlanCache:
             seen.add(key)
             misses.append((co, arch, kw))
         if misses:
+            sid = planstore.current_sweep_id(sweep_id) \
+                or f"warmup-{secrets.token_hex(6)}"
             results = search_many(misses, executor=executor,
                                   max_workers=max_workers)
             for (co, arch, kw), result in zip(misses, results):
-                self._admit(co, arch, kw, result)
+                self._admit(co, arch, kw, result, sweep_id=sid)
         return {"requested": len(norm), "hits": len(norm) - len(misses),
                 "solved": len(misses)}
 
     # ------------------------------------------------------------ bundles
 
     def export_bundle(self, path) -> int:
-        """Write every in-memory plan to a single JSON bundle file (for
-        shipping a benchmark host's sweep to a serving host).  Returns the
-        number of plans exported."""
+        """Write every plan this cache can see — the in-memory layer
+        *plus* everything in the durable store (current engine version
+        only) — to a single JSON bundle file, for shipping a benchmark
+        host's sweep to a serving fleet.  Returns the number of plans
+        exported."""
+        import tempfile
+
         with self._lock:
-            entries = [{"key": list(k), "plan": p.to_json()}
-                       for k, p in self._mem.items()]
+            plans = {k: p.to_json() for k, p in self._mem.items()}
+        for key in self.store.keys():
+            if key in plans or key[2] != ENGINE_VERSION:
+                continue
+            raw = self.store.get(key)
+            if raw is None:
+                continue
+            try:
+                d = json.loads(raw)
+                if tuple(d["key"]) != key:
+                    continue
+                plans[key] = d["plan"]
+            except (ValueError, KeyError, TypeError):
+                continue                # corrupt rows never ship
+        entries = [{"key": list(k), "plan": p} for k, p in plans.items()]
         bundle = {"schema": "repro/plan-bundle/v1",
                   "engine_version": ENGINE_VERSION,
                   "plans": entries}
@@ -444,7 +484,7 @@ class PlanCache:
                 continue
             with self._lock:
                 self._mem[key] = plan
-            self._store_disk(key, plan)
+            self._store_disk(key, plan, sweep_id="bundle-import")
             n += 1
         return n
 

@@ -13,11 +13,15 @@ are evaluated per block candidate in the same SoA pass.
 
 Every entry point resolves through the :class:`repro.core.plan.PlanCache`
 (the ``MappingPlan`` subsystem): the first call per (shape, arch, engine
-version) solves and persists a plan to the disk store, every later call —
-in this process or any other pointed at the same ``$REPRO_PLAN_CACHE`` —
-is a dictionary/JSON lookup with **no search at all**.  Serving engines
-pre-populate the cache at startup (``ServeEngine`` warmup) and benchmark
-hosts can ship their sweeps as plan bundles
+version) solves and persists a plan to the durable store
+(:mod:`repro.core.planstore` — SQLite WAL with LRU/age eviction and
+per-plan provenance, degrading to a JSON dir or memory-only under store
+faults), so every later call — in this process or any other pointed at
+the same ``$REPRO_PLAN_CACHE`` — is a dictionary/row lookup with **no
+search at all**.  Store faults never reach the autotuner: a degraded
+store costs durability, never a wrong (or missing) block shape.  Serving
+engines pre-populate the cache at startup (``ServeEngine`` warmup) and
+benchmark hosts can ship their sweeps as plan bundles
 (``benchmarks/paper_tables.export_plans``).
 
 VMEM working-set constraints mirror the kernels' actual scratch/BlockSpec

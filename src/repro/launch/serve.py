@@ -9,7 +9,12 @@ Plan-cache wiring (the MappingPlan subsystem, ``repro.core.plan``):
 (equivalent to ``REPRO_PLAN_CACHE=DIR``); ``--plan-bundle PATH`` imports
 a bundle exported by ``benchmarks/paper_tables.export_plans`` before the
 engine starts, so startup warmup is pure cache hits; ``--no-plan-warmup``
-skips the startup warmup sweep entirely.
+skips the startup warmup sweep entirely; ``--plan-gc`` runs the store's
+garbage collection (age expiry + LRU eviction + vacuum) before startup —
+the knob a fleet cron job would use.  The output JSON reports which
+store backend actually served the run (``plan_store``): ``sqlite`` on a
+healthy host, ``json`` or ``memory`` after degradations (see
+``repro.core.planstore``).
 """
 from __future__ import annotations
 
@@ -45,13 +50,19 @@ def main() -> None:
                          "into the store before starting the engine")
     ap.add_argument("--no-plan-warmup", action="store_true",
                     help="skip the startup plan-warmup sweep")
+    ap.add_argument("--plan-gc", action="store_true",
+                    help="garbage-collect the plan store (age expiry + "
+                         "LRU eviction + vacuum) before starting")
     args = ap.parse_args()
 
     if args.plan_cache:
         os.environ["REPRO_PLAN_CACHE"] = args.plan_cache
+    from repro.core.plan import get_plan_cache
     imported = 0
+    gc_out = None
+    if args.plan_gc:
+        gc_out = get_plan_cache().gc()
     if args.plan_bundle:
-        from repro.core.plan import get_plan_cache
         imported = get_plan_cache().import_bundle(args.plan_bundle)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -72,6 +83,7 @@ def main() -> None:
     done = eng.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done)
+    store = get_plan_cache().store_stats()["store"]
     print(json.dumps({
         "requests": len(done),
         "completed": sum(r.done or len(r.output) > 0 for r in done),
@@ -83,6 +95,9 @@ def main() -> None:
         "plan_bundle_imported": imported,
         "plan_warmup_solved": eng.stats.get("plan_warmup_solved", 0),
         "plan_warmup_hits": eng.stats.get("plan_warmup_hits", 0),
+        "plan_store": store.get("backend"),
+        "plan_store_plans": store.get("plans", 0),
+        "plan_gc": gc_out,
     }))
 
 

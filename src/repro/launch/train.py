@@ -51,7 +51,8 @@ def warmup_kernel_plans(model: Model, seq: int) -> Dict[str, int]:
         shapes["attention_blocks"] = [(seq, seq, cfg.hd)]
     if cfg.has_ssm:
         shapes["ssd_chunk_len"] = [(seq, cfg.ssm_headdim, cfg.ssm_state)]
-    return get_plan_cache().warmup(plan_jobs(shapes))
+    return get_plan_cache().warmup(plan_jobs(shapes),
+                                   sweep_id="train-warmup")
 
 
 def train_loop(model: Model, *, steps: int, batch: int, seq: int,
@@ -64,9 +65,13 @@ def train_loop(model: Model, *, steps: int, batch: int, seq: int,
     cfg = model.cfg
     opt_cfg = opt_cfg or OptConfig(total_steps=steps)
     if warmup_plans:
+        from repro.core.plan import get_plan_cache
         ws = warmup_kernel_plans(model, seq)
+        store = get_plan_cache().store_stats()["store"]
         print(f"[train] plan warmup: {ws['solved']} solved, "
-              f"{ws['hits']} already cached")
+              f"{ws['hits']} already cached "
+              f"(store: {store.get('backend')}, "
+              f"{store.get('plans', 0)} plans)")
     data = SyntheticLM(cfg.vocab_size, seq, batch, seed=seed,
                        encdec=cfg.is_encdec, d_model=cfg.d_model,
                        enc_ratio=cfg.enc_ratio)

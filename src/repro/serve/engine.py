@@ -40,24 +40,39 @@ class Request:
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    # wall-clock decode budget from slot admission; a request that blows
+    # it is force-finished (``timed_out``) so it cannot pin a slot until
+    # the engine-global ``max_steps``
+    deadline_s: Optional[float] = None
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     done: bool = False
+    timed_out: bool = False
 
 
 class ServeEngine:
-    """Fixed batch of decode slots; requests stream through them."""
+    """Fixed batch of decode slots; requests stream through them.
+
+    Per-request guards: ``Request.max_new_tokens`` (optionally clamped
+    by the engine's ``max_new_cap``) bounds tokens, and
+    ``Request.deadline_s`` (default ``default_deadline_s``) bounds wall
+    time per slot occupancy — one runaway request degrades to a
+    truncated answer instead of holding a decode slot hostage."""
 
     def __init__(self, model: Model, params, *, batch_size: int,
                  cache_len: int, prompt_len: int,
                  mesh: Optional[Mesh] = None,
-                 plan_warmup: bool = True):
+                 plan_warmup: bool = True,
+                 max_new_cap: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None):
         self.model = model
         self.params = params
         self.mesh = mesh
         self.B = batch_size
         self.cache_len = cache_len
         self.prompt_len = prompt_len
+        self.max_new_cap = max_new_cap
+        self.default_deadline_s = default_deadline_s
         cfg = model.cfg
 
         self._prefill = jax.jit(
@@ -66,7 +81,7 @@ class ServeEngine:
             lambda p, c, t: model.decode(p, c, t, mesh),
             donate_argnums=(1,))
         self.stats: Dict[str, float] = {"prefill_calls": 0, "decode_steps": 0,
-                                        "tokens_out": 0}
+                                        "tokens_out": 0, "timeouts": 0}
         if plan_warmup:
             self.warm_plans()
 
@@ -101,7 +116,8 @@ class ServeEngine:
         from ..core.plan import get_plan_cache
 
         t0 = time.time()
-        stats = get_plan_cache().warmup(plan_jobs(self.plan_shapes()))
+        stats = get_plan_cache().warmup(plan_jobs(self.plan_shapes()),
+                                        sweep_id="serve-warmup")
         self.stats["plan_warmup_hits"] = stats["hits"]
         self.stats["plan_warmup_solved"] = stats["solved"]
         self.stats["plan_warmup_s"] = time.time() - t0
@@ -162,17 +178,23 @@ class ServeEngine:
                 merged[key] = jax.tree.map(splice, cache[key], fresh[key])
         return jnp.where(selj, fresh_last, last), merged
 
+    def _token_budget(self, r: Request) -> int:
+        return (r.max_new_tokens if self.max_new_cap is None
+                else min(r.max_new_tokens, self.max_new_cap))
+
     def run(self, requests: List[Request], *, max_steps: int = 10_000
             ) -> List[Request]:
         """Process all requests with continuous slot reuse."""
         queue = list(requests)
         active: List[Optional[Request]] = [None] * self.B
+        admitted: List[float] = [0.0] * self.B    # slot admission times
 
         def refill() -> List[int]:
             new = []
             for i in range(self.B):
                 if active[i] is None and queue:
                     active[i] = queue.pop(0)
+                    admitted[i] = time.monotonic()
                     new.append(i)
             return new
 
@@ -186,15 +208,24 @@ class ServeEngine:
             self.stats["decode_steps"] += 1
             last = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)
             host = np.asarray(last)
+            now = time.monotonic()
             for i, r in enumerate(active):
                 if r is None or r.done:
                     continue
                 r.output.append(int(host[i]))
                 self.stats["tokens_out"] += 1
-                if len(r.output) >= r.max_new_tokens or \
-                        (r.eos_id is not None and host[i] == r.eos_id):
-                    r.done = True
-                    active[i] = None       # slot freed (continuous batching)
+                deadline = (r.deadline_s if r.deadline_s is not None
+                            else self.default_deadline_s)
+                if deadline is not None and now - admitted[i] >= deadline:
+                    # runaway guard: force-finish instead of pinning the
+                    # slot until the engine-global max_steps
+                    r.timed_out = True
+                    self.stats["timeouts"] += 1
+                elif not (len(r.output) >= self._token_budget(r)
+                          or (r.eos_id is not None and host[i] == r.eos_id)):
+                    continue
+                r.done = True
+                active[i] = None           # slot freed (continuous batching)
             new = refill()
             if new:
                 # the bug this fixes: refilled slots used to inherit the

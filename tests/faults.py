@@ -1,0 +1,238 @@
+"""Reusable fault-injection harness for the plan-store fault matrix.
+
+Each helper injects one storage fault — at the layer where the real
+fault would occur — and restores the world on exit.  The harness is
+deliberately framework-free (plain context managers, no pytest
+dependency) so the CI fault job, the tests and ad-hoc debugging can all
+drive the same injections.
+
+Injection points
+----------------
+* ``enospc_writes()``       every durable write fails: sqlite raises
+                            "database or disk is full", ``os.replace``
+                            raises ``ENOSPC`` (hits the JSON rung and
+                            quarantine moves too)
+* ``busy_storm(n)``         the next ``n`` sqlite write statements raise
+                            SQLITE_BUSY ("database is locked") before
+                            the store's retry loop sees a success
+* ``readonly_open()``       opening the database read-write raises
+                            "attempt to write a readonly database"
+                            (container runs as root, so chmod cannot
+                            produce this — it must be injected)
+* ``no_sqlite()``           the sqlite3 module is "missing": the ladder
+                            must start on the JSON rung
+* ``corrupt_db(root)``      scribble over the database header — a torn
+                            write that destroyed the file
+* ``torn_file(path)``       truncate any file to a fraction of its size
+                            (crash mid-write; also used for torn shm
+                            segments)
+* ``spawn_resolver(root)``  a real subprocess that resolves the
+                            canonical plan against ``root`` and prints
+                            its JSON — for multi-process writer races
+* ``spawn_killed_writer(root)``  a subprocess that opens the database,
+                            starts an uncommitted write transaction and
+                            SIGKILLs itself — the WAL must roll it back
+
+All sqlite injections patch ``repro.core.planstore`` attributes, so they
+only affect backends *opened inside* the context — construct the
+``PlanCache``/``PlanStore`` under the ``with`` block.
+"""
+import contextlib
+import errno
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.core import planstore
+
+try:
+    import sqlite3
+except ImportError:                      # pragma: no cover
+    sqlite3 = None
+
+#: source root, for subprocess PYTHONPATH (…/src/repro/core/planstore.py)
+SRC_DIR = Path(planstore.__file__).resolve().parents[2]
+
+_MUTATING = ("INSERT", "UPDATE", "DELETE", "REPLACE")
+
+
+def _is_mutation(sql: str) -> bool:
+    return sql.lstrip().upper().startswith(_MUTATING)
+
+
+class FlakyConn:
+    """Proxy over a real sqlite connection that fails selected
+    ``execute`` calls with a chosen exception, then behaves normally."""
+
+    def __init__(self, conn, state):
+        self._real = conn
+        self._state = state              # {"left": n, "exc": factory}
+
+    def execute(self, sql, *args):
+        if self._state["left"] > 0 and _is_mutation(sql):
+            self._state["left"] -= 1
+            raise self._state["exc"]()
+        return self._real.execute(sql, *args)
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+@contextlib.contextmanager
+def enospc_writes():
+    """Every durable write path reports a full disk: sqlite mutations
+    raise "database or disk is full", ``os.replace`` raises ENOSPC."""
+    real_write = planstore._SqliteBackend._write
+    real_replace = os.replace
+
+    def fail_sql(self, sql, params=()):
+        if _is_mutation(sql):
+            raise sqlite3.OperationalError("database or disk is full")
+        return real_write(self, sql, params)
+
+    def fail_replace(src, dst, *a, **kw):
+        raise OSError(errno.ENOSPC, "No space left on device", str(dst))
+
+    planstore._SqliteBackend._write = fail_sql
+    os.replace = fail_replace
+    try:
+        yield
+    finally:
+        planstore._SqliteBackend._write = real_write
+        os.replace = real_replace
+
+
+@contextlib.contextmanager
+def busy_storm(n):
+    """The next ``n`` sqlite write statements (on connections opened
+    inside the context) raise SQLITE_BUSY.  Yields the mutable state
+    dict: ``state["left"]`` is the number of failures still pending, so
+    a test can drain or extend the storm mid-flight."""
+    state = {"left": n,
+             "exc": lambda: sqlite3.OperationalError("database is locked")}
+    real_open = planstore._SqliteBackend._open_rw
+
+    def open_flaky(self):
+        return FlakyConn(real_open(self), state)
+
+    planstore._SqliteBackend._open_rw = open_flaky
+    try:
+        yield state
+    finally:
+        planstore._SqliteBackend._open_rw = real_open
+
+
+@contextlib.contextmanager
+def readonly_open():
+    """Read-write opens of the database fail as read-only media would.
+    Only affects stores opened inside the context; an existing database
+    file is then served through the store's read-only fallback."""
+    real_open = planstore._SqliteBackend._open_rw
+
+    def fail_open(self):
+        raise sqlite3.OperationalError(
+            "attempt to write a readonly database")
+
+    planstore._SqliteBackend._open_rw = fail_open
+    try:
+        yield
+    finally:
+        planstore._SqliteBackend._open_rw = real_open
+
+
+@contextlib.contextmanager
+def no_sqlite():
+    """Pretend the sqlite3 module is unavailable (exotic Python builds):
+    the ladder must start on the legacy JSON rung."""
+    real = planstore._SQLITE_OK
+    planstore._SQLITE_OK = False
+    try:
+        yield
+    finally:
+        planstore._SQLITE_OK = real
+
+
+def corrupt_db(root) -> Path:
+    """Destroy the database header in place (torn write over the file)
+    and drop any sidecars, so the next open sees garbage."""
+    db = Path(root) / planstore.DB_FILENAME
+    data = db.read_bytes()
+    db.write_bytes(b"\x00torn-write-garbage\x00" + data[24:])
+    for suffix in ("-wal", "-shm"):
+        try:
+            os.unlink(str(db) + suffix)
+        except OSError:
+            pass
+    return db
+
+
+def torn_file(path, keep=0.5) -> int:
+    """Truncate ``path`` to ``keep`` of its size — a crash mid-write.
+    Returns the new size."""
+    path = Path(path)
+    size = path.stat().st_size
+    new = int(size * keep)
+    with open(path, "r+b") as f:
+        f.truncate(new)
+    return new
+
+
+# ------------------------------------------------------------ subprocesses
+
+#: resolves the canonical (gemm_softmax 256x1024x64, edge) plan against
+#: the store root in argv[1] and prints the plan JSON — concurrent copies
+#: of this script are the multi-process concurrent-writer fault
+RESOLVER_SCRIPT = r"""
+import json, sys
+from repro.core.hardware import edge
+from repro.core.plan import PlanCache
+from repro.core.workload import gemm_softmax
+
+cache = PlanCache(sys.argv[1])
+plan = cache.resolve(gemm_softmax(256, 1024, 64), edge())
+cache.store.close()
+print(json.dumps(plan.to_json(), sort_keys=True))
+"""
+
+#: opens the store database directly, starts an uncommitted write
+#: transaction holding the write lock, then SIGKILLs itself — WAL
+#: recovery in the next reader must roll the transaction back
+KILLED_WRITER_SCRIPT = r"""
+import os, signal, sqlite3, sys
+
+db = sqlite3.connect(os.path.join(sys.argv[1], "plans.sqlite"))
+db.execute("PRAGMA journal_mode = WAL")
+db.execute("BEGIN IMMEDIATE")
+db.execute(
+    "INSERT OR REPLACE INTO plans (arch_sig, op_sig, engine_version, "
+    "kw_sig, payload, size_bytes, sweep_id, created_s, last_hit_s, hits) "
+    "VALUES ('deadbeefdeadbeef', 'deadbeefdeadbeef', 999, "
+    "'deadbeefdeadbeef', '{torn', 5, 'killed-writer', 0, 0, 0)")
+sys.stdout.write("armed\n")
+sys.stdout.flush()
+os.kill(os.getpid(), signal.SIGKILL)
+"""
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC_DIR) + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def spawn_resolver(root) -> subprocess.Popen:
+    """Start (not wait for) a subprocess resolving the canonical plan
+    against ``root``; its stdout is one JSON line."""
+    return subprocess.Popen(
+        [sys.executable, "-c", RESOLVER_SCRIPT, str(root)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        text=True, env=_env())
+
+
+def spawn_killed_writer(root) -> subprocess.CompletedProcess:
+    """Run a writer that SIGKILLs itself mid-transaction (waits for the
+    kill; the schema must already exist in ``root``)."""
+    return subprocess.run(
+        [sys.executable, "-c", KILLED_WRITER_SCRIPT, str(root)],
+        capture_output=True, text=True, env=_env(), timeout=120)

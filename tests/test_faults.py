@@ -1,0 +1,394 @@
+"""Plan-store fault matrix (tests/faults.py harness).
+
+The durability contract under injected faults — torn writes, ENOSPC,
+read-only stores, corrupt databases, SQLITE_BUSY storms, killed writers,
+multi-process races: ``PlanCache.resolve``, ``warmup``, the autotuner
+and ``ServeEngine`` startup never crash, never serve a wrong plan (every
+resolved plan is bit-identical to a clean-store run), and each distinct
+degradation cause warns at most once per process.
+
+Also pins the per-request runaway guards in ``ServeEngine.run``
+(deadline / token-cap): one non-terminating request must not hold a
+decode slot until the engine-global ``max_steps``.
+"""
+import json
+import warnings
+
+import pytest
+
+import faults
+from repro.core import plan as plan_mod
+from repro.core import planstore
+from repro.core.hardware import edge
+from repro.core.plan import PlanCache
+from repro.core.workload import gemm_softmax
+
+CO = lambda: gemm_softmax(256, 1024, 64)
+
+_CLEAN_PLAN_JSON = {}
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """Each test gets a clean warn-once registry (the production
+    semantics are per-process; tests assert per-cause counts)."""
+    planstore._reset_warned()
+    yield
+    planstore._reset_warned()
+
+
+def _plan_warnings(rec):
+    """The warnings our storage stack raised (JAX et al. are noisy)."""
+    return [w for w in rec
+            if "PlanStore" in str(w.message) or "PlanCache" in str(w.message)]
+
+
+def _clean_plan_json(tmp_path):
+    """The canonical plan solved once against a pristine store — the
+    bit-identity reference every faulted resolve is compared against."""
+    if "plan" not in _CLEAN_PLAN_JSON:
+        cache = PlanCache(str(tmp_path / "clean-reference"))
+        plan = cache.resolve(CO(), edge())
+        cache.store.close()
+        _CLEAN_PLAN_JSON["plan"] = json.dumps(plan.to_json(), sort_keys=True)
+    return _CLEAN_PLAN_JSON["plan"]
+
+
+def _as_json(plan):
+    return json.dumps(plan.to_json(), sort_keys=True)
+
+
+# --------------------------------------------------------------- ENOSPC
+
+
+def test_enospc_resolves_bit_identical_with_one_warning(tmp_path):
+    """Satellite: a full disk costs durability, never correctness — and
+    warns exactly once, not once per write."""
+    ref = _clean_plan_json(tmp_path)
+    with faults.enospc_writes():
+        cache = PlanCache(str(tmp_path / "plans"))
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            plans = [cache.resolve(CO(), edge()) for _ in range(3)]
+            # distinct shapes -> distinct failing writes, still one warning
+            cache.resolve(gemm_softmax(128, 512, 64), edge())
+            cache.resolve(gemm_softmax(512, 512, 32), edge())
+        assert all(_as_json(p) == ref for p in plans)
+        assert len(_plan_warnings(rec)) == 1
+        assert "memory" in str(_plan_warnings(rec)[0].message)
+    # the one-shot flag outlives the fault: writes stay off, still silent
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert _as_json(cache.resolve(CO(), edge())) == ref
+        cache.resolve(gemm_softmax(256, 256, 128), edge())
+    assert not _plan_warnings(rec)
+    assert cache.store.stats()["write_ok"] is False
+
+
+def test_enospc_during_warmup_never_crashes(tmp_path):
+    ref = _clean_plan_json(tmp_path)
+    jobs = [(CO(), edge()), (gemm_softmax(128, 512, 64), edge())]
+    with faults.enospc_writes():
+        cache = PlanCache(str(tmp_path / "plans"))
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            stats = cache.warmup(jobs, executor="serial")
+        assert stats["solved"] == 2
+        assert len(_plan_warnings(rec)) <= 1
+        assert _as_json(cache.lookup(CO(), edge())) == ref
+
+
+def test_enospc_during_autotune_matches_clean_run(tmp_path, monkeypatch):
+    from repro.kernels.autotune import attention_blocks
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "clean"))
+    with plan_mod._CACHES_LOCK:
+        plan_mod._CACHES.clear()
+    clean = attention_blocks(1024, 1024, 64)
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "faulted"))
+    with plan_mod._CACHES_LOCK:
+        plan_mod._CACHES.clear()
+    with faults.enospc_writes():
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            faulted = attention_blocks(1024, 1024, 64)
+    assert faulted == clean
+    assert len(_plan_warnings(rec)) <= 1
+
+
+# --------------------------------------------------------- SQLITE_BUSY
+
+
+def test_busy_storm_below_retry_budget_is_absorbed_silently(tmp_path):
+    ref = _clean_plan_json(tmp_path)
+    with faults.busy_storm(planstore.BUSY_RETRIES - 2):
+        cache = PlanCache(str(tmp_path / "plans"))
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            plan = cache.resolve(CO(), edge())
+    assert _as_json(plan) == ref
+    assert not _plan_warnings(rec)                 # retries absorbed it
+    cache.store.close()
+    fresh = PlanCache(str(tmp_path / "plans"))     # and the write landed
+    assert _as_json(fresh.lookup(CO(), edge())) == ref
+
+
+def test_busy_storm_exhausted_skips_write_keeps_rung(tmp_path):
+    ref = _clean_plan_json(tmp_path)
+    with faults.busy_storm(10 * planstore.BUSY_RETRIES) as storm:
+        cache = PlanCache(str(tmp_path / "plans"))
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            plan = cache.resolve(CO(), edge())
+        assert _as_json(plan) == ref
+        pw = _plan_warnings(rec)
+        assert len(pw) == 1 and "busy" in str(pw[0].message)
+        storm["left"] = 0                          # the storm drains...
+        cache.resolve(gemm_softmax(128, 512, 64), edge())
+        cache.store.close()
+    fresh = PlanCache(str(tmp_path / "plans"))
+    # ...and later writes succeeded on the SAME rung (no demotion)
+    assert fresh.lookup(gemm_softmax(128, 512, 64), edge()) is not None
+    assert fresh.store.backend == "sqlite"
+
+
+# ------------------------------------------------------- corrupt database
+
+
+def test_corrupt_db_quarantined_and_resolves_bit_identical(tmp_path):
+    ref = _clean_plan_json(tmp_path)
+    root = tmp_path / "plans"
+    cache = PlanCache(str(root))
+    cache.resolve(CO(), edge())
+    cache.store.close()
+    faults.corrupt_db(root)
+    fresh = PlanCache(str(root))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        plan = fresh.resolve(CO(), edge())
+    assert _as_json(plan) == ref
+    pw = _plan_warnings(rec)
+    assert len(pw) == 1 and "quarantined" in str(pw[0].message)
+    assert (root / planstore.CORRUPT_DIRNAME / planstore.DB_FILENAME).exists()
+    fresh.store.close()
+    # the recreated database is healthy and holds the re-solve
+    third = PlanCache(str(root))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert _as_json(third.lookup(CO(), edge())) == ref
+    assert not _plan_warnings(rec)
+
+
+def test_torn_json_file_quarantined(tmp_path):
+    """Satellite: a corrupt legacy JSON plan is moved to ``corrupt/``
+    (not deleted, not re-parsed forever) and the plan re-solves."""
+    ref = _clean_plan_json(tmp_path)
+    root = tmp_path / "plans"
+    with faults.no_sqlite():
+        cache = PlanCache(str(root))
+        cache.resolve(CO(), edge())
+        victim = next(root.glob("*.json"))
+        faults.torn_file(victim, keep=0.4)
+        fresh = PlanCache(str(root))
+        with pytest.warns(RuntimeWarning, match="corrupted stored plan"):
+            plan = fresh.resolve(CO(), edge())
+        assert _as_json(plan) == ref
+        assert (root / planstore.CORRUPT_DIRNAME / victim.name).exists()
+        # quarantine means the next cold process reads the re-solve silently
+        third = PlanCache(str(root))
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            assert _as_json(third.lookup(CO(), edge())) == ref
+        assert not _plan_warnings(rec)
+
+
+# ----------------------------------------------------------- read-only
+
+
+def test_readonly_store_serves_reads_with_one_warning(tmp_path):
+    ref = _clean_plan_json(tmp_path)
+    root = tmp_path / "plans"
+    cache = PlanCache(str(root))
+    cache.resolve(CO(), edge())
+    cache.store.close()
+    with faults.readonly_open():
+        ro = PlanCache(str(root))
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            # stored plan is served (read path), new plan solves into
+            # memory (write path silently off after the open warning)
+            assert _as_json(ro.resolve(CO(), edge())) == ref
+            novel = ro.resolve(gemm_softmax(128, 512, 64), edge())
+            assert ro.resolve(gemm_softmax(128, 512, 64), edge()) is novel
+        pw = _plan_warnings(rec)
+        assert len(pw) == 1 and "read-only" in str(pw[0].message)
+        assert ro.store.stats()["read_only"] is True
+
+
+def test_no_sqlite_falls_back_to_json_then_migrates(tmp_path):
+    """sqlite3 missing -> JSON rung; once sqlite is back, the legacy
+    files auto-migrate into the database with zero lost plans."""
+    ref = _clean_plan_json(tmp_path)
+    root = tmp_path / "plans"
+    with faults.no_sqlite():
+        cache = PlanCache(str(root))
+        assert cache.store.backend == "json"
+        cache.resolve(CO(), edge())
+        assert list(root.glob("*.json"))
+    fresh = PlanCache(str(root))
+    with pytest.warns(RuntimeWarning, match="migrated 1 legacy"):
+        assert _as_json(fresh.lookup(CO(), edge())) == ref
+    assert not list(root.glob("*.json"))           # moved aside, not lost
+    assert list((root / planstore.MIGRATED_DIRNAME).glob("*.json"))
+    assert fresh.store.stats()["by_sweep"].get("legacy-json") == 1
+
+
+# ------------------------------------------------- killed / racing writers
+
+
+def test_killed_writer_mid_transaction_rolls_back(tmp_path):
+    """SIGKILL mid-write-transaction: WAL recovery discards the torn
+    transaction; the store stays consistent and silent."""
+    import sqlite3
+
+    ref = _clean_plan_json(tmp_path)
+    root = tmp_path / "plans"
+    cache = PlanCache(str(root))
+    cache.resolve(CO(), edge())
+    cache.store.close()
+    proc = faults.spawn_killed_writer(root)
+    assert proc.returncode == -9 and "armed" in proc.stdout
+    fresh = PlanCache(str(root))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert _as_json(fresh.lookup(CO(), edge())) == ref
+    assert not _plan_warnings(rec)
+    assert not [k for k in fresh.store.keys() if k[2] == 999]  # rolled back
+    fresh.store.close()
+    db = sqlite3.connect(str(root / planstore.DB_FILENAME))
+    try:
+        assert db.execute("PRAGMA integrity_check").fetchone()[0] == "ok"
+    finally:
+        db.close()
+
+
+def test_concurrent_process_writers_bit_identical(tmp_path):
+    """Three real processes race the same key through WAL: every writer
+    prints the same plan, the survivor database is intact, no litter."""
+    import sqlite3
+
+    ref = _clean_plan_json(tmp_path)
+    root = tmp_path / "plans"
+    procs = [faults.spawn_resolver(root) for _ in range(3)]
+    outs = [p.communicate(timeout=300) for p in procs]
+    for p, (out, err) in zip(procs, outs):
+        assert p.returncode == 0, err
+        assert out.strip() == ref
+    fresh = PlanCache(str(root))
+    assert _as_json(fresh.lookup(CO(), edge())) == ref
+    fresh.store.close()
+    db = sqlite3.connect(str(root / planstore.DB_FILENAME))
+    try:
+        assert db.execute("PRAGMA integrity_check").fetchone()[0] == "ok"
+    finally:
+        db.close()
+    assert not list(root.glob("*.tmp"))
+    assert not list(root.glob("*-wal")) and not list(root.glob("*-shm"))
+
+
+# ------------------------------------------------ ServeEngine under faults
+
+
+@pytest.fixture(scope="module")
+def smoke_engine_parts():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+
+    cfg = get_smoke_config("glm4-9b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_serve_engine_startup_under_enospc(tmp_path, monkeypatch,
+                                           smoke_engine_parts):
+    """ServeEngine startup (plan warmup included) on a host with a full
+    disk: no crash, plans solved into memory, one warning."""
+    from repro.serve.engine import ServeEngine
+
+    model, params = smoke_engine_parts
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    with plan_mod._CACHES_LOCK:
+        plan_mod._CACHES.clear()
+    with faults.enospc_writes():
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            eng = ServeEngine(model, params, batch_size=2, cache_len=48,
+                              prompt_len=16)
+    assert eng.stats["plan_warmup_solved"] > 0
+    assert len(_plan_warnings(rec)) == 1
+
+
+# --------------------------------------------- per-request runaway guards
+
+
+def test_runaway_request_times_out_others_finish(smoke_engine_parts):
+    """Satellite: one non-terminating request among finishers — the
+    deadline frees its slot; the finishers complete normally and the
+    loop ends long before the engine-global max_steps."""
+    import numpy as np
+
+    from repro.serve.engine import Request, ServeEngine
+
+    model, params = smoke_engine_parts
+    eng = ServeEngine(model, params, batch_size=2, cache_len=64,
+                      prompt_len=8, plan_warmup=False)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    runaway = Request(rid=0, prompt=prompt, max_new_tokens=10**6,
+                      deadline_s=0.0)
+    finishers = [Request(rid=i, prompt=prompt, max_new_tokens=4)
+                 for i in (1, 2, 3)]
+    done = eng.run([runaway] + finishers, max_steps=64)
+    assert runaway.done and runaway.timed_out
+    assert len(runaway.output) < 10**6
+    for r in finishers:
+        assert r.done and not r.timed_out and len(r.output) == 4
+    assert eng.stats["timeouts"] == 1
+    assert eng.stats["decode_steps"] < 64          # terminated early
+    assert done is not None
+
+
+def test_max_new_cap_clamps_every_request(smoke_engine_parts):
+    import numpy as np
+
+    from repro.serve.engine import Request, ServeEngine
+
+    model, params = smoke_engine_parts
+    eng = ServeEngine(model, params, batch_size=2, cache_len=64,
+                      prompt_len=8, plan_warmup=False, max_new_cap=2)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=50)
+            for i in range(3)]
+    eng.run(reqs, max_steps=32)
+    assert all(r.done and len(r.output) == 2 and not r.timed_out
+               for r in reqs)
+    assert eng.stats["timeouts"] == 0
+
+
+def test_default_deadline_applies_when_request_has_none(smoke_engine_parts):
+    import numpy as np
+
+    from repro.serve.engine import Request, ServeEngine
+
+    model, params = smoke_engine_parts
+    eng = ServeEngine(model, params, batch_size=2, cache_len=64,
+                      prompt_len=8, plan_warmup=False,
+                      default_deadline_s=0.0)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=50)
+            for i in range(2)]
+    eng.run(reqs, max_steps=32)
+    assert all(r.done and r.timed_out for r in reqs)
+    assert eng.stats["timeouts"] == 2

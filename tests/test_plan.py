@@ -86,30 +86,52 @@ def test_version_bump_invalidates(tmp_path, monkeypatch):
 # ------------------------------------------------------------ durability
 
 
-def test_corrupted_file_warns_and_resolves(tmp_path):
+def _rewrite_payload(root, fn):
+    """Tamper with every stored payload through a direct connection (the
+    moral equivalent of another process corrupting the store)."""
+    import sqlite3
+
+    db = sqlite3.connect(str(root / "plans.sqlite"))
+    try:
+        for rowid, payload in db.execute(
+                "SELECT rowid, payload FROM plans").fetchall():
+            db.execute("UPDATE plans SET payload = ? WHERE rowid = ?",
+                       (fn(payload), rowid))
+        db.commit()
+    finally:
+        db.close()
+
+
+def test_corrupted_record_warns_quarantines_and_resolves(tmp_path):
     cache = _mk(tmp_path)
     co, arch = CO(), edge()
     p1 = cache.resolve(co, arch)
-    path = cache._path(cache.key(co, arch, {}))
-    path.write_text("{ not json !")
+    cache.store.close()
+    _rewrite_payload(tmp_path / "plans", lambda _p: "{ not json !")
     fresh = PlanCache(str(tmp_path / "plans"))
-    with pytest.warns(RuntimeWarning, match="corrupted plan file"):
+    with pytest.warns(RuntimeWarning, match="corrupted stored plan"):
         p2 = fresh.resolve(co, arch)
     assert p2 == p1 and fresh.stats["corrupt"] == 1
-    # the re-solve overwrote the corrupted file with valid JSON
-    assert json.loads(path.read_text())["plan"]["latency_s"] == p1.latency_s
+    # the corrupt row was quarantined and the re-solve re-persisted: a
+    # third instance reads the valid plan silently
+    third = PlanCache(str(tmp_path / "plans"))
+    assert third.lookup(co, arch) == p1 and third.stats["corrupt"] == 0
 
 
 def test_wrong_key_payload_treated_as_miss(tmp_path):
     cache = _mk(tmp_path)
     co, arch = CO(), edge()
     p1 = cache.resolve(co, arch)
-    path = cache._path(cache.key(co, arch, {}))
-    blob = json.loads(path.read_text())
-    blob["key"][0] = "0" * 16                       # forged arch signature
-    path.write_text(json.dumps(blob))
+    cache.store.close()
+
+    def forge(payload):
+        blob = json.loads(payload)
+        blob["key"][0] = "0" * 16                   # forged arch signature
+        return json.dumps(blob)
+
+    _rewrite_payload(tmp_path / "plans", forge)
     fresh = PlanCache(str(tmp_path / "plans"))
-    with pytest.warns(RuntimeWarning, match="corrupted plan file"):
+    with pytest.warns(RuntimeWarning, match="corrupted stored plan"):
         assert fresh.resolve(co, arch) == p1
 
 
@@ -124,15 +146,20 @@ def test_unwritable_store_degrades_to_memory(tmp_path):
 
 
 def test_concurrent_writers_atomic(tmp_path):
-    """Many writers racing on the same key: every resolve returns the
-    same plan and the final file is valid, complete JSON."""
+    """Many writers racing on the same key (separate store connections,
+    WAL mode): every resolve returns the same plan, the final database
+    passes an integrity check, and there is no write litter."""
+    import sqlite3
+
     co, arch = CO(), edge()
-    results, errors = [], []
+    results, errors, caches = [], [], []
 
     def worker():
         try:
             # separate instances: no shared in-memory layer, all hit disk
-            results.append(PlanCache(str(tmp_path / "plans")).resolve(co, arch))
+            c = PlanCache(str(tmp_path / "plans"))
+            caches.append(c)
+            results.append(c.resolve(co, arch))
         except BaseException as e:   # pragma: no cover
             errors.append(e)
 
@@ -143,11 +170,17 @@ def test_concurrent_writers_atomic(tmp_path):
         t.join()
     assert not errors
     assert all(r == results[0] for r in results)
-    cache = PlanCache(str(tmp_path / "plans"))
-    path = cache._path(cache.key(co, arch, {}))
-    blob = json.loads(path.read_text())            # parses => not partial
-    assert MappingPlan.from_json(blob["plan"]) == results[0]
-    assert not list(path.parent.glob("*.tmp"))     # no temp-file litter
+    for c in caches:
+        c.store.close()
+    fresh = PlanCache(str(tmp_path / "plans"))
+    assert fresh.lookup(co, arch) == results[0]    # readable => not partial
+    fresh.store.close()
+    db = sqlite3.connect(str(tmp_path / "plans" / "plans.sqlite"))
+    try:
+        assert db.execute("PRAGMA integrity_check").fetchone()[0] == "ok"
+    finally:
+        db.close()
+    assert not list((tmp_path / "plans").glob("*.tmp"))  # no write litter
 
 
 # --------------------------------------------------------------- bundles
@@ -393,7 +426,8 @@ def test_serve_engine_warmup_populates_cache(tmp_path, monkeypatch):
     eng = ServeEngine(model, params, batch_size=2, cache_len=48,
                       prompt_len=16)
     assert eng.stats["plan_warmup_solved"] > 0
-    assert list((tmp_path / "plans").glob("*.json"))
+    assert (tmp_path / "plans" / "plans.sqlite").exists()
+    assert get_plan_cache().store_stats()["store"]["plans"] > 0
     # every decode/prefill shape is now answerable without solving
     cache = get_plan_cache()
     for co, arch, kw in plan_jobs(eng.plan_shapes()):

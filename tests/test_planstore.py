@@ -1,0 +1,284 @@
+"""Storage-engine tests for repro.core.planstore: provenance columns,
+LRU/size/age eviction, generation-exact invalidation, legacy-JSON
+auto-migration, backend forcing, and the stats surface.
+
+Complementary to tests/test_faults.py (the fault matrix) — this file
+pins the *mechanics* of the store on the happy path, with an injectable
+clock so eviction order and age expiry are deterministic.
+"""
+import json
+
+import pytest
+
+from repro.core import planstore
+from repro.core.planstore import (CORRUPT_DIRNAME, DB_FILENAME,
+                                  MIGRATED_DIRNAME, PlanStore, key_filename,
+                                  parse_key_filename)
+
+
+def K(i, ver=5):
+    """A synthetic, filename-legal PlanKey."""
+    return (f"{i:016x}", f"{i:016x}", ver, f"{i:016x}")
+
+
+def payload_for(key, pad=0):
+    return json.dumps({"key": list(key), "plan": {"v": key[0]},
+                       "pad": "x" * pad})
+
+
+class Clock:
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture()
+def clock():
+    return Clock()
+
+
+def _store(tmp_path, clock, **kw):
+    return PlanStore(tmp_path / "plans", now=clock, **kw)
+
+
+# ------------------------------------------------------------- filenames
+
+
+def test_key_filename_roundtrip():
+    key = K(7)
+    assert parse_key_filename(key_filename(key)) == key
+    assert parse_key_filename("notaplan.json") is None
+    assert parse_key_filename(key_filename(key) + ".tmp") is None
+
+
+# -------------------------------------------------------- put/get/stats
+
+
+def test_roundtrip_provenance_and_hit_counting(tmp_path, clock):
+    store = _store(tmp_path, clock)
+    key = K(1)
+    assert store.get(key) is None                  # miss, nothing created
+    assert not (tmp_path / "plans" / DB_FILENAME).exists()
+    assert store.put(key, payload_for(key), sweep_id="sweep-a")
+    clock.t += 5
+    assert store.get(key) == payload_for(key)
+    clock.t += 5
+    assert store.get(key) == payload_for(key)
+    s = store.stats()
+    assert s["backend"] == "sqlite" and s["plans"] == 1
+    assert s["hits"] == 2
+    assert s["by_sweep"] == {"sweep-a": 1}
+    assert s["by_version"] == {5: 1}
+    store.close()
+
+
+def test_sweep_id_env_default(tmp_path, clock, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_SWEEP_ID", "fleet-sweep-7")
+    store = _store(tmp_path, clock)
+    store.put(K(1), payload_for(K(1)))             # no explicit sweep_id
+    store.put(K(2), payload_for(K(2)), sweep_id="explicit")
+    s = store.stats()
+    assert s["by_sweep"] == {"fleet-sweep-7": 1, "explicit": 1}
+    store.close()
+
+
+# --------------------------------------------------------------- eviction
+
+
+def test_lru_eviction_max_plans_keeps_recently_hit(tmp_path, clock):
+    store = _store(tmp_path, clock, max_plans=4)
+    for i in range(4):
+        clock.t += 1
+        store.put(K(i), payload_for(K(i)))
+    clock.t += 1
+    assert store.get(K(0)) is not None             # refresh the oldest
+    clock.t += 1
+    store.put(K(9), payload_for(K(9)))             # overflow by one
+    keys = set(store.keys())
+    assert len(keys) == 4
+    assert K(0) in keys and K(9) in keys           # recently hit + newest
+    assert K(1) not in keys                        # least-recently-hit died
+    assert store.stats()["evicted_total"] == 1
+    store.close()
+
+
+def test_max_bytes_bound_enforced_across_sweep(tmp_path, clock):
+    """Acceptance: a sweep writing far past max_bytes leaves the store
+    at or under the bound the whole way, and vacuum returns the pages
+    (db file does not monotonically grow)."""
+    pad = 2000
+    size_one = len(payload_for(K(0), pad=pad).encode())
+    store = _store(tmp_path, clock, max_bytes=5 * size_one + 10)
+    for i in range(25):
+        clock.t += 1
+        store.put(K(i), payload_for(K(i), pad=pad))
+        assert store.stats()["bytes"] <= 5 * size_one + 10
+    s = store.stats()
+    assert s["plans"] <= 5 and s["evicted_total"] >= 20
+    assert s["db_bytes"] < 25 * size_one           # vacuum reclaimed pages
+    store.close()
+
+
+def test_age_gc_expires_old_plans(tmp_path, clock):
+    store = _store(tmp_path, clock)
+    store.put(K(1), payload_for(K(1)))
+    clock.t += 100
+    store.put(K(2), payload_for(K(2)))
+    clock.t += 10                                  # K(1) age 110, K(2) age 10
+    out = store.gc(max_age_s=50)
+    assert out["expired"] == 1
+    assert store.keys() == [K(2)]
+    store.close()
+
+
+def test_gc_with_tightened_bounds_does_not_stick(tmp_path, clock):
+    store = _store(tmp_path, clock, max_plans=100)
+    for i in range(6):
+        clock.t += 1
+        store.put(K(i), payload_for(K(i)))
+    out = store.gc(max_plans=3)                    # one-off tightening
+    assert out["evicted"] == 3 and len(store.keys()) == 3
+    for i in range(10, 14):
+        clock.t += 1
+        store.put(K(i), payload_for(K(i)))         # permanent bound still 100
+    assert len(store.keys()) == 7
+    store.close()
+
+
+# ------------------------------------------------------------ invalidate
+
+
+def test_invalidate_removes_exactly_the_stale_generation(tmp_path, clock):
+    store = _store(tmp_path, clock)
+    for i in range(3):
+        store.put(K(i, ver=4), payload_for(K(i, ver=4)))
+    for i in range(2):
+        store.put(K(i, ver=5), payload_for(K(i, ver=5)))
+    assert store.invalidate(engine_version=4) == 3
+    s = store.stats()
+    assert s["by_version"] == {5: 2}
+    assert all(k[2] == 5 for k in store.keys())
+    assert store.invalidate(engine_version=4) == 0  # idempotent
+    store.close()
+
+
+def test_invalidate_by_sweep_and_age_are_anded(tmp_path, clock):
+    store = _store(tmp_path, clock)
+    store.put(K(1), payload_for(K(1)), sweep_id="old-sweep")
+    clock.t += 100
+    store.put(K(2), payload_for(K(2)), sweep_id="old-sweep")
+    store.put(K(3), payload_for(K(3)), sweep_id="new-sweep")
+    # sweep AND age: only the old-sweep row older than 50s dies
+    assert store.invalidate(sweep_id="old-sweep", older_than_s=50) == 1
+    assert set(store.keys()) == {K(2), K(3)}
+    assert store.invalidate() == 0                 # no filters -> no-op
+    store.close()
+
+
+# ------------------------------------------------------------- migration
+
+
+def test_legacy_json_auto_migration_zero_lost(tmp_path, clock):
+    """Acceptance: pointing the SQLite store at a legacy flat-JSON dir
+    migrates every valid plan (zero lost), quarantines unparsable files,
+    and moves originals aside so no later open re-parses them."""
+    root = tmp_path / "plans"
+    root.mkdir()
+    keys = [K(i) for i in range(3)]
+    for key in keys:
+        (root / key_filename(key)).write_text(payload_for(key))
+    (root / key_filename(K(9))).write_text("{ torn json")
+    store = _store(tmp_path, clock)
+    with pytest.warns(RuntimeWarning, match="migrated 3 legacy"):
+        got = {k: store.get(k) for k in keys}
+    assert got == {k: payload_for(k) for k in keys}
+    s = store.stats()
+    assert s["migrated"] == 3 and s["plans"] == 3
+    assert s["by_sweep"] == {"legacy-json": 3}
+    assert not list(root.glob("*.json"))           # moved, not deleted
+    assert len(list((root / MIGRATED_DIRNAME).glob("*.json"))) == 3
+    assert len(list((root / CORRUPT_DIRNAME).glob("*.json"))) == 1
+    store.close()
+    # second open: nothing left to migrate, no warning
+    planstore._reset_warned()
+    import warnings as _w
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        again = _store(tmp_path, clock)
+        assert again.get(keys[0]) == payload_for(keys[0])
+    assert not [w for w in rec if "migrated" in str(w.message)]
+    again.close()
+
+
+# -------------------------------------------------------- backend forcing
+
+
+def test_forced_json_backend(tmp_path, clock, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_STORE", "json")
+    store = _store(tmp_path, clock)
+    assert store.backend == "json"
+    key = K(1)
+    store.put(key, payload_for(key))
+    assert (tmp_path / "plans" / key_filename(key)).exists()
+    assert not (tmp_path / "plans" / DB_FILENAME).exists()
+    assert store.get(key) == payload_for(key)
+    assert store.keys() == [key]
+
+
+def test_forced_memory_backend_accepts_and_drops(tmp_path, clock):
+    store = _store(tmp_path, clock, backend="memory")
+    assert store.backend == "memory"
+    assert store.put(K(1), payload_for(K(1))) is False
+    assert store.get(K(1)) is None
+    assert not (tmp_path / "plans").exists()       # never touches disk
+    assert store.stats()["writes_dropped"] == 1
+
+
+def test_unknown_backend_rejected(tmp_path, clock):
+    with pytest.raises(ValueError, match="unknown plan-store backend"):
+        _store(tmp_path, clock, backend="carrier-pigeon")
+
+
+def test_env_bounds_respected(tmp_path, clock, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_STORE_MAX_PLANS", "2")
+    store = _store(tmp_path, clock)
+    for i in range(5):
+        clock.t += 1
+        store.put(K(i), payload_for(K(i)))
+    assert len(store.keys()) == 2
+    store.close()
+
+
+# ----------------------------------------------------- json backend parity
+
+
+def test_json_backend_gc_and_invalidate(tmp_path, clock, monkeypatch):
+    import os
+    import time
+
+    monkeypatch.setenv("REPRO_PLAN_STORE", "json")
+    store = _store(tmp_path, clock)
+    now = time.time()
+    for i, age in enumerate((500, 300, 10)):
+        key = K(i)
+        store.put(key, payload_for(key))
+        p = tmp_path / "plans" / key_filename(key)
+        os.utime(p, (now - age, now - age))
+    clock.t = now
+    assert store.invalidate(older_than_s=400) == 1          # the 500s one
+    out = store.gc(max_plans=1)
+    assert out["evicted"] == 1                              # the 300s one
+    assert store.keys() == [K(2)]
+    st = store.stats()
+    assert st["backend"] == "json" and st["plans"] == 1
+
+
+def test_json_backend_version_invalidate(tmp_path, clock, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_STORE", "json")
+    store = _store(tmp_path, clock)
+    store.put(K(1, ver=4), payload_for(K(1, ver=4)))
+    store.put(K(1, ver=5), payload_for(K(1, ver=5)))
+    assert store.invalidate(engine_version=4) == 1
+    assert store.keys() == [K(1, ver=5)]

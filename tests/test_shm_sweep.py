@@ -244,6 +244,106 @@ def test_worker_crash_reclaims_orphans_and_finishes_serially(monkeypatch):
     assert [r.best.spec for r in broken] == [r.best.spec for r in ref]
 
 
+@shm_required
+def test_worker_killed_mid_shm_write_torn_segment_reclaimed(monkeypatch):
+    """A worker SIGKILLed *mid-``batch_to_shm``* leaves a torn segment —
+    created and half-filled with garbage, its ref never delivered.  The
+    sweep must warn, finish the jobs serially with bit-identical
+    results, and the prefix sweep must reclaim the torn segment (its
+    contents are never parsed, so torn bytes cannot poison anything)."""
+    from concurrent.futures.process import BrokenProcessPool
+    from multiprocessing import shared_memory
+
+    monkeypatch.setattr(secrets, "token_hex", lambda n: "tornsg")
+    prefix = f"cm{os.getpid():x}xtornsg"
+    torn_name = f"{prefix}_torn0001"
+
+    class _KilledMidWritePool:
+        def __init__(self, max_workers=None):
+            pass
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            return False
+
+        def submit(self, fn, payload):
+            # the worker got as far as creating the segment and writing
+            # part of the grid before the OOM-killer got it
+            try:
+                seg = shared_memory.SharedMemory(name=torn_name,
+                                                 create=True, size=1024)
+                seg.buf[:512] = bytes(range(256)) * 2
+                seg.close()
+            except FileExistsError:
+                pass
+
+            class _F:
+                @staticmethod
+                def result():
+                    raise BrokenProcessPool("worker killed mid-write")
+
+                @staticmethod
+                def cancel():
+                    return True
+
+            return _F()
+
+    monkeypatch.setattr(search_mod, "ProcessPoolExecutor",
+                        _KilledMidWritePool)
+    jobs = _small_jobs()[:4]
+    with pytest.warns(RuntimeWarning, match="worker pool broke"):
+        broken = search_many(jobs, executor="process")
+    assert torn_name not in _segments()            # torn segment reclaimed
+    ref = search_many(jobs, executor="serial")
+    assert [r.latency for r in broken] == [r.latency for r in ref]
+    assert [r.energy_pj for r in broken] == [r.energy_pj for r in ref]
+    assert [r.best.spec for r in broken] == [r.best.spec for r in ref]
+
+
+@shm_required
+def test_cleanup_races_concurrent_healthy_sweep():
+    """``cleanup_shm_segments`` for a dead sweep's prefix, looping
+    concurrently with a live process sweep under its own prefix: the
+    janitor reclaims exactly the stale segments, never touches the live
+    sweep's, and the sweep's results stay bit-identical to serial."""
+    import threading
+    import time
+    from multiprocessing import shared_memory
+
+    stale_prefix = f"cmstale{secrets.token_hex(2)}"
+    stale = [shared_memory.SharedMemory(name=f"{stale_prefix}_{i}",
+                                        create=True, size=64)
+             for i in range(4)]
+    for s in stale:
+        s.close()
+    reclaimed, stop = [], threading.Event()
+
+    def janitor():
+        while not stop.is_set():
+            reclaimed.extend(cleanup_shm_segments(stale_prefix))
+            time.sleep(0.002)
+
+    t = threading.Thread(target=janitor)
+    t.start()
+    jobs = _small_jobs()
+    try:
+        before = _segments()
+        out = search_many(jobs, executor="process")
+    finally:
+        stop.set()
+        t.join()
+    assert sorted(reclaimed) == sorted(f"{stale_prefix}_{i}"
+                                       for i in range(4))
+    assert not [n for n in _segments() if n.startswith(stale_prefix)]
+    # the healthy sweep leaked nothing and lost nothing to the janitor
+    assert not {n for n in _segments() - before if n.startswith("cm")}
+    ref = search_many(jobs, executor="serial")
+    assert [r.latency for r in out] == [r.latency for r in ref]
+    assert [r.best.spec for r in out] == [r.best.spec for r in ref]
+
+
 # ---------------------------------------------------- warning fallbacks
 
 def test_pool_unavailable_falls_back_to_threads_with_warning(monkeypatch):
