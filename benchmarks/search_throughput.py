@@ -50,7 +50,13 @@ case) the size-aware scheduler must place the huge job in the first
 chunk (deterministic assertion) and must not lose throughput to
 contiguous slicing, with results bit-identical across both modes.
 
-Emits ``BENCH_search.json`` (schema comet/search_throughput/v5, see
+The **analysis section** (schema v6, the static-analysis subsystem
+gates) runs the smoke-shape kernel/sharded trace contracts
+(``repro.analysis.contracts``) and the repo-invariant AST lint
+(``repro.analysis.lint``) and requires both to be clean — the same
+checks CI's ``static-analysis`` job runs standalone.
+
+Emits ``BENCH_search.json`` (schema comet/search_throughput/v6, see
 benchmarks/README.md) and prints ``name,us_per_call,derived`` CSV rows.
 Exits non-zero if the speedup floor or any invariant is violated.
 """
@@ -466,6 +472,37 @@ def chunking_bench(repeats: int = 2) -> Dict:
     }
 
 
+def analysis_gates() -> Dict:
+    """Schema v6 gates: smoke-shape trace contracts + repo lint, timed.
+
+    The contract arm resolves each kernel's MappingPlan and audits the
+    traced jaxpr against the cost model; the lint arm runs every repo
+    invariant including the static VMEM-budget evaluation.  Any failure
+    fails the benchmark gate (and CI)."""
+    from repro.analysis.contracts import (kernel_contract_checks,
+                                          sharded_contract_checks)
+    from repro.analysis.lint import lint_repo
+    smoke = {"gemm_epilogue_blocks": [(512, 4096, 128)],
+             "attention_blocks": [(1024, 1024, 64)],
+             "ssd_chunk_len": [(4096, 64, 128)]}
+    t0 = time.perf_counter()
+    checks = kernel_contract_checks(smoke)
+    checks += sharded_contract_checks()
+    contracts_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    findings = lint_repo()
+    lint_s = time.perf_counter() - t0
+    failures = [c.to_dict() for c in checks if not c.ok]
+    return {
+        "contract_checks": len(checks),
+        "contract_failures": failures,
+        "contracts_s": contracts_s,
+        "lint_findings": [f.to_dict() for f in findings],
+        "lint_s": lint_s,
+        "ok": not failures and not findings,
+    }
+
+
 def run_all(out_path: str = "BENCH_search.json") -> Dict:
     from benchmarks.paper_tables import PROVISIONING_GEMMS
 
@@ -488,8 +525,9 @@ def run_all(out_path: str = "BENCH_search.json") -> Dict:
     executors = executor_sweep()
     autotune = autotune_bench()
     chunking = chunking_bench()
+    analysis = analysis_gates()
     result = {
-        "schema": "comet/search_throughput/v5",
+        "schema": "comet/search_throughput/v6",
         "speedup_floor": SPEEDUP_FLOOR,
         "spaces": spaces,
         "exhaustive_vs_randomized": pairs,
@@ -497,12 +535,14 @@ def run_all(out_path: str = "BENCH_search.json") -> Dict:
         "executors": executors,
         "autotune": autotune,
         "chunking": chunking,
+        "analysis": analysis,
         "ok": (all(s["speedup"] >= SPEEDUP_FLOOR for s in spaces)
                and all(p["ok"] for p in pairs)
                and prov["ok"]
                and executors["ok"]
                and autotune["ok"]
-               and chunking["ok"]),
+               and chunking["ok"]
+               and analysis["ok"]),
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)

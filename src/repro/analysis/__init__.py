@@ -1,0 +1,27 @@
+"""Static analysis subsystem: trace contracts + repo-invariant lint.
+
+Two arms, both runnable as ``python -m repro.analysis`` (JSON out,
+nonzero exit on failure — the CI ``static-analysis`` job gates on it):
+
+- :mod:`repro.analysis.contracts` — cross-checks the Pallas kernels and
+  the shard_map model paths against the COMET cost model: traced GEMM
+  FLOPs and per-collective-type wire volumes must match what the winning
+  MappingPlan / declared collective schedule predicts.
+- :mod:`repro.analysis.lint` — AST lint for the invariants the review
+  process keeps re-litigating (array-polymorphic Eq. 1-7 path purity,
+  Pallas-kernel host hygiene, VMEM budgets, sqlite confinement).
+
+The jaxpr/HLO walkers these build on live in :mod:`repro.analysis.jaxpr`
+and :mod:`repro.analysis.hlo`; ``repro.launch.jaxpr_analysis`` /
+``repro.launch.hlo_analysis`` remain as compat shims.
+"""
+from .hlo import (CollectiveStats, HW, parse_collectives, roofline_terms,
+                  shape_bytes)
+from .jaxpr import (CollectiveRecord, TraceCounts, count_flops, count_jaxpr,
+                    structural_flops, trace_counts)
+
+__all__ = [
+    "CollectiveStats", "HW", "parse_collectives", "roofline_terms",
+    "shape_bytes", "CollectiveRecord", "TraceCounts", "count_flops",
+    "count_jaxpr", "structural_flops", "trace_counts",
+]

@@ -1,0 +1,96 @@
+"""CLI: ``python -m repro.analysis [--contracts] [--lint] [--json PATH]``.
+
+With no arm flags, both arms run.  Output is a single JSON document
+(schema ``repro/static-analysis/v1``) on stdout (or ``--json PATH``);
+human-readable mismatch reports go to stderr.  Exit code is nonzero when
+any contract check or lint finding fails — the CI gate.
+
+The contract arm needs a multi-device CPU mesh for the sharded checks, so
+this module sets ``--xla_force_host_platform_device_count=8`` before jax
+imports (only when XLA_FLAGS is not already set by the caller).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# `python -m repro.analysis` imports the package __init__ (and hence jax)
+# before this module runs, but XLA only reads XLA_FLAGS at backend
+# initialization — which nothing has triggered yet — so setting it here
+# still takes effect.
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+SCHEMA = "repro/static-analysis/v1"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contracts + repo-invariant lint")
+    ap.add_argument("--contracts", action="store_true",
+                    help="run only the trace-contract arm")
+    ap.add_argument("--lint", action="store_true",
+                    help="run only the AST lint arm")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the shard_map sharded-path contracts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="contracts on one small shape per kernel family "
+                         "instead of the full paper table (fast tests)")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="relative tolerance for volume/FLOP contracts")
+    ap.add_argument("--json", metavar="PATH", default="-",
+                    help="write the JSON report here (default: stdout)")
+    args = ap.parse_args(argv)
+    run_contracts_arm = args.contracts or not args.lint
+    run_lint_arm = args.lint or not args.contracts
+
+    result = {"schema": SCHEMA}
+    ok = True
+
+    if run_contracts_arm:
+        from .contracts import DEFAULT_TOL, run_contracts
+        shapes = None
+        if args.smoke:
+            shapes = {"gemm_epilogue_blocks": [(512, 4096, 128)],
+                      "attention_blocks": [(1024, 1024, 64)],
+                      "ssd_chunk_len": [(4096, 64, 128)]}
+        report = run_contracts(shapes, sharded=not args.no_sharded,
+                               tol=args.tol if args.tol is not None
+                               else DEFAULT_TOL)
+        result["contracts"] = report.to_dict()
+        if not report.ok:
+            print("contract mismatches:", file=sys.stderr)
+            print(report.describe_failures(), file=sys.stderr)
+        ok = ok and report.ok
+
+    if run_lint_arm:
+        from .lint import lint_repo
+        findings = lint_repo()
+        result["lint"] = {"findings": [f.to_dict() for f in findings],
+                          "count": len(findings), "ok": not findings}
+        for f in findings:
+            print(f.describe(), file=sys.stderr)
+        ok = ok and not findings
+
+    result["ok"] = ok
+    text = json.dumps(result, indent=2, sort_keys=True)
+    if args.json == "-":
+        print(text)
+    else:
+        with open(args.json, "w") as fh:
+            fh.write(text + "\n")
+        summary = []
+        if "contracts" in result:
+            c = result["contracts"]
+            summary.append(f"contracts {c['passed']}/{c['checked']} passed")
+        if "lint" in result:
+            summary.append(f"lint {result['lint']['count']} findings")
+        print(f"{'OK' if ok else 'FAIL'}: {', '.join(summary)} -> {args.json}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,416 @@
+"""Static trace contracts: kernels and sharded paths vs. the cost model.
+
+The COMET cost model (Eqs. 1-7 + the tabulated collective tables) is only
+useful if it tells the truth about what the Pallas kernels and the
+shard_map model paths actually execute.  This module cross-checks them
+*structurally* — no compilation, no execution:
+
+1. **Kernel contracts** — for every paper kernel shape, resolve the
+   winning :class:`~repro.core.plan.MappingPlan` through the
+   :class:`~repro.core.plan.PlanCache` (exactly as the kernels themselves
+   do), trace the kernel with the plan's block sizes via
+   ``jax.make_jaxpr``, and assert the traced ``dot_general`` FLOPs equal
+   the compound op's GEMM FLOPs — and that a single-core kernel traces
+   **zero** collectives.
+
+2. **Sharded contracts** — trace ``parallel.collective_planner.
+   sharded_softmax_xent`` on a CPU mesh and assert its collective
+   schedule (type, participant count, occurrence count, wire volume)
+   matches :func:`~repro.parallel.collective_planner.
+   softmax_collective_schedule` — the declaration the planner costs.
+   Wire volumes on both sides go through ``core.collectives.
+   collective_cost`` on the cluster NoC, so the check is "the cost model
+   charges the traced program exactly what it charged the plan".
+
+A mismatch report carries the op/kernel name, the plan fingerprints
+(op_sig/arch_sig/best_index), and predicted vs. traced numbers — enough
+to see *which* plan lied and by how much.
+
+Tolerances: FLOP contracts are exact for the paper shapes (blocks divide
+the aligned dims); the default ``tol`` absorbs block-padding slack for
+off-grid shapes.  Collective counts are compared exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .jaxpr import TraceCounts, trace_counts
+
+__all__ = ["ContractCheck", "ContractReport", "gemm_flops",
+           "kernel_contract_checks", "sharded_contract_checks",
+           "run_contracts", "KERNEL_TRACERS"]
+
+DEFAULT_TOL = 0.02
+
+
+@dataclass
+class ContractCheck:
+    """One predicted-vs-traced assertion."""
+
+    name: str           # e.g. "gemm_softmax[4096,16384,4096]"
+    kind: str           # "gemm_flops" | "collective_count" | ...
+    predicted: float
+    traced: float
+    tolerance: float
+    ok: bool
+    detail: Dict = field(default_factory=dict)
+
+    @property
+    def rel_err(self) -> float:
+        base = max(abs(self.predicted), abs(self.traced))
+        return abs(self.predicted - self.traced) / base if base else 0.0
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "kind": self.kind,
+                "predicted": self.predicted, "traced": self.traced,
+                "rel_err": self.rel_err, "tolerance": self.tolerance,
+                "ok": self.ok, "detail": self.detail}
+
+    def describe(self) -> str:
+        status = "ok" if self.ok else "MISMATCH"
+        line = (f"[{status}] {self.name} {self.kind}: "
+                f"predicted={self.predicted:.6g} traced={self.traced:.6g} "
+                f"(rel_err={self.rel_err:.2e}, tol={self.tolerance:g})")
+        fp = self.detail.get("plan")
+        if fp:
+            line += (f"\n         plan op_sig={fp.get('op_sig', '?')[:12]} "
+                     f"arch_sig={fp.get('arch_sig', '?')[:12]} "
+                     f"best_index={fp.get('best_index')}")
+        extra = self.detail.get("note")
+        if extra and not self.ok:
+            line += f"\n         {extra}"
+        return line
+
+
+@dataclass
+class ContractReport:
+    checks: List[ContractCheck] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    @property
+    def failures(self) -> List[ContractCheck]:
+        return [c for c in self.checks if not c.ok]
+
+    def to_dict(self) -> Dict:
+        return {"checked": len(self.checks),
+                "passed": sum(1 for c in self.checks if c.ok),
+                "failed": len(self.failures),
+                "ok": self.ok,
+                "checks": [c.to_dict() for c in self.checks]}
+
+    def describe_failures(self) -> str:
+        return "\n".join(c.describe() for c in self.failures)
+
+
+def _mk_check(name: str, kind: str, predicted: float, traced: float,
+              tol: float, detail: Dict) -> ContractCheck:
+    base = max(abs(predicted), abs(traced))
+    err = abs(predicted - traced) / base if base else 0.0
+    return ContractCheck(name, kind, float(predicted), float(traced),
+                         tol, err <= tol, detail)
+
+
+def gemm_flops(co) -> float:
+    """GEMM (MXU) FLOPs of a compound op — the number the traced
+    ``dot_general`` count must reproduce."""
+    total = 0.0
+    for op in co.gemm_ops():
+        pts = 1
+        for d in op.dims:
+            pts *= co.dim_sizes[d]
+        total += pts * op.flops_per_point
+    return total
+
+
+def _plan_fp(plan) -> Dict:
+    return {"op_sig": plan.op_sig, "arch_sig": plan.arch_sig,
+            "best_index": plan.best_index,
+            "engine_version": plan.engine_version}
+
+
+# ------------------------------------------------------------- kernel arm
+
+
+def _bf16(shape):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def _trace_gemm_softmax(co, blocks):
+    from repro.kernels.gemm_softmax import gemm_softmax as kernel
+    bm, bk = blocks
+    M, K = co.dim_sizes["M"], co.dim_sizes["K"]
+    N = co.dim_sizes["N"]
+
+    def fn(a, b):
+        return kernel(a, b, block_m=bm, block_k=bk)
+
+    return trace_counts(fn, _bf16((M, K)), _bf16((K, N)))
+
+
+def _trace_gemm_layernorm(co, blocks):
+    from repro.kernels.gemm_layernorm import gemm_layernorm as kernel
+    bm, bk = blocks
+    M, K = co.dim_sizes["M"], co.dim_sizes["K"]
+    N = co.dim_sizes["N"]
+
+    def fn(a, b, g, beta):
+        return kernel(a, b, g, beta, block_m=bm, block_k=bk)
+
+    return trace_counts(fn, _bf16((M, K)), _bf16((K, N)),
+                        _bf16((N,)), _bf16((N,)))
+
+
+def _trace_flash_attention(co, blocks):
+    from repro.kernels.flash_attention import flash_attention_fwd as kernel
+    bq, bk = blocks
+    # co dims (workload.flash_attention(M, K, N, L)): M=Sq, K=L=head dim,
+    # N=Skv.  causal=False: the compound op models the full score matrix;
+    # the causal path skips blocks via cond, which the walker upper-bounds.
+    M, N, D = co.dim_sizes["M"], co.dim_sizes["N"], co.dim_sizes["K"]
+
+    def fn(q, k, v):
+        return kernel(q, k, v, causal=False, block_q=bq, block_k=bk)
+
+    return trace_counts(fn, _bf16((1, 1, M, D)), _bf16((1, 1, N, D)),
+                        _bf16((1, 1, N, D)))
+
+
+def _trace_ssd(co, chunk):
+    from repro.kernels.ssd import ssd_scan_fwd as kernel
+    # ssd_chunk dims: Cq=chunk, Ds=state, Pd=head dim x heads, Sq=sequence
+    S, P, N = co.dim_sizes["Sq"], co.dim_sizes["Pd"], co.dim_sizes["Ds"]
+
+    def fn(xdt, dA, B, C):
+        return kernel(xdt, dA, B, C, chunk=chunk)
+
+    return trace_counts(fn, _bf16((1, S, P)), _bf16((1, S)),
+                        _bf16((1, S, N)), _bf16((1, S, N)))
+
+
+# family -> tracer(co, blocks) -> TraceCounts.  Tests substitute a broken
+# tracer here (via the ``tracers`` argument) to prove mismatches are caught.
+KERNEL_TRACERS: Dict[str, Callable] = {
+    "gemm_softmax": _trace_gemm_softmax,
+    "gemm_layernorm": _trace_gemm_layernorm,
+    "flash_attention": _trace_flash_attention,
+    "ssd": _trace_ssd,
+}
+
+
+def kernel_contract_checks(
+        shapes: Optional[Dict[str, Sequence[Tuple[int, ...]]]] = None,
+        tol: float = DEFAULT_TOL,
+        tracers: Optional[Dict[str, Callable]] = None,
+) -> List[ContractCheck]:
+    """Contract checks for every kernel shape in ``shapes`` (default: the
+    paper shapes).  Each check resolves the kernel's MappingPlan exactly
+    as the kernel would, traces the kernel at the plan's block sizes, and
+    compares GEMM FLOPs (plus a zero-collective assertion — these are
+    single-core kernels)."""
+    from repro.core.plan import get_plan_cache
+    from repro.kernels.autotune import (PAPER_KERNEL_SHAPES, _pair_of,
+                                        attention_plan_job,
+                                        gemm_epilogue_plan_job,
+                                        ssd_plan_jobs)
+    shapes = shapes if shapes is not None else PAPER_KERNEL_SHAPES
+    use = dict(KERNEL_TRACERS)
+    if tracers:
+        use.update(tracers)
+    cache = get_plan_cache()
+    checks: List[ContractCheck] = []
+
+    def add(family: str, shape, co, plan, blocks, trace: TraceCounts,
+            predicted_flops: float, note: str = "") -> None:
+        name = f"{family}[{','.join(str(s) for s in shape)}]"
+        detail = {"family": family, "shape": list(shape),
+                  "blocks": list(blocks) if isinstance(blocks, tuple)
+                  else blocks,
+                  "plan": _plan_fp(plan)}
+        if note:
+            detail["note"] = note
+        checks.append(_mk_check(name, "gemm_flops", predicted_flops,
+                                trace.flops, tol, detail))
+        # single-core kernels must trace zero collectives
+        checks.append(_mk_check(name, "collective_volume", 0.0,
+                                trace.total_collective_dv(), 0.0, detail))
+
+    for m, n, k in shapes.get("gemm_epilogue_blocks", ()):
+        job = gemm_epilogue_plan_job(m, n, k)
+        if job is None:
+            continue
+        co, arch, kw, pairs = job
+        plan = cache.resolve(co, arch, **kw)
+        blocks = _pair_of(plan, pairs)
+        for family in ("gemm_softmax", "gemm_layernorm"):
+            trace = use[family](co, blocks)
+            add(family, (m, n, k), co, plan, blocks, trace, gemm_flops(co),
+                note="both epilogue kernels share the gemm_softmax plan "
+                     "(identical GEMM, different VPU epilogue)")
+
+    for sq, skv, d in shapes.get("attention_blocks", ()):
+        job = attention_plan_job(sq, skv, d)
+        if job is None:
+            continue
+        co, arch, kw, pairs = job
+        plan = cache.resolve(co, arch, **kw)
+        blocks = _pair_of(plan, pairs)
+        trace = use["flash_attention"](co, blocks)
+        add("flash_attention", (sq, skv, d), co, plan, blocks, trace,
+            gemm_flops(co),
+            note="traced at the plan's aligned dims (M=max(sq,128)); "
+                 "causal=False matches the non-causal compound op")
+
+    for s, p, n in shapes.get("ssd_chunk_len", ()):
+        jobs = ssd_plan_jobs(s, p, n)
+        if not jobs:
+            continue
+        from repro.kernels.autotune import ssd_chunk_len
+        c_win = ssd_chunk_len(s, p, n)
+        for co, arch, kw, c in jobs:
+            if c != c_win:
+                continue
+            plan = cache.resolve(co, arch, **kw)
+            trace = use["ssd"](co, c_win)
+            nchunks = -(-s // c_win)
+            add("ssd", (s, p, n), co, plan, c_win, trace,
+                gemm_flops(co) * nchunks,
+                note=f"per-chunk compound op x {nchunks} chunks")
+    return checks
+
+
+# ------------------------------------------------------------ sharded arm
+
+
+def _default_mesh():
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = len(devs)
+    if n >= 4 and n % 2 == 0:
+        data, model = 2, n // 2
+    else:
+        data, model = 1, n
+    arr = np.array(devs[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def sharded_contract_checks(mesh=None, *, batch: int = 8, seq: int = 16,
+                            d_model: int = 64, vocab_p: int = 512,
+                            strategies: Sequence[str] = ("dist", "gather"),
+                            tol: float = DEFAULT_TOL,
+                            ) -> List[ContractCheck]:
+    """Trace ``sharded_softmax_xent`` on a CPU mesh and check its
+    collectives against the declared schedule the planner costs.
+
+    Traced entries with participants <= 1 are ignored (the cost model
+    charges zero for single-participant collectives), so this degrades
+    gracefully on a 1-device mesh — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for a real
+    check (the ``python -m repro.analysis`` CLI sets 8 by default).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.collectives import collective_cost
+    from repro.core.hardware import tpu_v5e
+    from repro.parallel.collective_planner import (
+        sharded_softmax_xent, softmax_collective_schedule)
+
+    if mesh is None:
+        mesh = _default_mesh()
+    # sharded_softmax_xent reduces over every data-parallel axis present
+    # (pod AND data on the multi-pod production mesh)
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= int(mesh.shape.get(ax, 1))
+    P_model = int(mesh.shape.get("model", 1))
+    noc = tpu_v5e().cluster_noc
+    rows_local = (batch * seq) // dp
+    v_local = vocab_p // P_model
+    real_vocab = vocab_p - max(1, v_local // 4)
+
+    h = jax.ShapeDtypeStruct((batch, seq, d_model), jnp.float32)
+    w = jax.ShapeDtypeStruct((d_model, vocab_p), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+    def wire(col_type: str, dv: float, P: int) -> float:
+        return collective_cost(col_type, dv, P, noc).volume_bytes
+
+    checks: List[ContractCheck] = []
+    for strategy in strategies:
+        def fn(h_, w_, y_):
+            return sharded_softmax_xent(h_, w_, y_, mesh,
+                                        real_vocab=real_vocab,
+                                        strategy=strategy)
+
+        trace = trace_counts(fn, h, w, y)
+        declared = softmax_collective_schedule(
+            strategy, rows_local, vocab_p, P_model, dp_participants=dp)
+        name = f"sharded_softmax_xent[{strategy},mesh={dp}x{P_model}]"
+        detail_base = {"strategy": strategy, "mesh": [dp, P_model],
+                       "rows_local": rows_local, "vocab_p": vocab_p,
+                       "declared": [list(c) for c in declared]}
+
+        # GEMM FLOPs: the vocab-sharded logits GEMM, globally
+        predicted_flops = 2.0 * batch * seq * d_model * vocab_p
+        checks.append(_mk_check(name, "gemm_flops", predicted_flops,
+                                trace.flops, tol, dict(detail_base)))
+
+        traced = {k: r for k, r in trace.collectives.items()
+                  if k[1] > 1}
+        # The tracer buckets by (type, participants), so distinct declared
+        # entries that share a key — e.g. model-axis stat All-Reduces and
+        # data-parallel scalar All-Reduces on a mesh where both axes have
+        # the same size — must be aggregated before comparison (wire is
+        # linear in DV, so summing per-entry wires matches the traced
+        # wire of the summed DV).
+        declared_by_key: dict = {}
+        for col_type, dv, P, count in declared:
+            agg = declared_by_key.setdefault(
+                (col_type, P), {"count": 0.0, "wire": 0.0})
+            agg["count"] += count
+            agg["wire"] += wire(col_type, dv * count, P)
+        for (col_type, P), agg in declared_by_key.items():
+            rec = traced.pop((col_type, P), None)
+            detail = dict(detail_base)
+            detail["participants"] = P
+            detail["collective"] = col_type
+            t_count = rec.count if rec else 0.0
+            t_dv = rec.dv_bytes if rec else 0.0
+            checks.append(_mk_check(f"{name}/{col_type}@P{P}",
+                                    "collective_count", agg["count"],
+                                    t_count, 0.0, detail))
+            checks.append(_mk_check(f"{name}/{col_type}@P{P}",
+                                    "collective_wire_bytes", agg["wire"],
+                                    wire(col_type, t_dv, P), tol, detail))
+        if traced:
+            # collectives the implementation executes but the planner
+            # never charges — exactly the drift this checker exists for
+            detail = dict(detail_base)
+            detail["undeclared"] = [r.to_dict() for r in traced.values()]
+            detail["note"] = ("traced collectives missing from "
+                              "softmax_collective_schedule")
+            extra_dv = sum(r.dv_bytes for r in traced.values())
+            checks.append(_mk_check(f"{name}/undeclared",
+                                    "collective_volume", 0.0, extra_dv,
+                                    0.0, detail))
+    return checks
+
+
+# ------------------------------------------------------------------ entry
+
+
+def run_contracts(shapes=None, *, sharded: bool = True,
+                  tol: float = DEFAULT_TOL) -> ContractReport:
+    """Both contract arms as one report (the CLI and CI entry point)."""
+    report = ContractReport()
+    report.checks.extend(kernel_contract_checks(shapes, tol=tol))
+    if sharded:
+        report.checks.extend(sharded_contract_checks(tol=tol))
+    return report

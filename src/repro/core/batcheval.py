@@ -67,7 +67,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -242,7 +242,7 @@ def pareto_merge(points: Sequence[Tuple]) -> List[Tuple]:
     best_en = np.inf
     out: List[Tuple] = []
     for p in sorted(points, key=lambda p: (p[0], p[1])):
-        if p[1] < best_en:
+        if p[1] < best_en:  # scalar-ok: merged points are float tuples
             out.append(p)
             best_en = p[1]
     return out
@@ -304,7 +304,7 @@ def _crowding_distances(keys: np.ndarray) -> np.ndarray:
         span = float(col[-1] - col[0])
         dist[order[0]] = np.inf
         dist[order[-1]] = np.inf
-        if span > 0.0 and n > 2:
+        if span > 0.0 and n > 2:  # scalar-ok: span is float(), n is int
             dist[order[1:-1]] += (col[2:] - col[:-2]) / span
     return dist
 
@@ -335,7 +335,7 @@ class ParetoArchive:
     def __init__(self, dims: int = 2, maxlen: int = 512):
         if dims not in (2, 3):
             raise ValueError(f"dims must be 2 or 3, got {dims}")
-        if maxlen < 2:
+        if maxlen < 2:  # scalar-ok: constructor int arg
             raise ValueError(f"maxlen must be >= 2, got {maxlen}")
         self.dims = dims
         self.maxlen = maxlen
@@ -346,7 +346,7 @@ class ParetoArchive:
 
     def _key(self, p: Tuple) -> Tuple[float, ...]:
         # all-minimized objective vector
-        if self.dims == 2:
+        if self.dims == 2:  # scalar-ok: dims validated to 2 or 3
             return (p[0], p[1])
         return (p[0], p[1], -p[2])
 
@@ -375,7 +375,7 @@ class ParetoArchive:
         — and distances are recomputed after each removal, so pruning one
         of two tight neighbours immediately un-crowds the other."""
         pts = sorted(self._points, key=self._key)
-        target = max(2, self.maxlen // 2)
+        target = max(2, self.maxlen // 2)  # scalar-ok: ints
         keys = np.asarray([self._key(p) for p in pts], dtype=np.float64)
         alive = list(range(len(pts)))
         while len(alive) > target:
@@ -471,7 +471,7 @@ def batch_to_shm(br: BatchResult, *, prefix: str = "cmbatch") -> ShmBatchRef:
         off = -(-off // _SHM_ALIGN) * _SHM_ALIGN
         metas.append((key, off, a.dtype.str, tuple(a.shape)))
         off += a.nbytes
-    total = max(off, 1)
+    total = max(off, 1)  # scalar-ok: byte offsets are ints
     for _attempt in range(8):
         try:
             shm = shared_memory.SharedMemory(

@@ -196,12 +196,12 @@ def collective_cost(
         return _collective_cost_array(col_type, data_volume, participants,
                                       noc)
     P = int(participants)
-    if P <= 1:
+    if P <= 1:  # scalar-ok: int() cast above
         return CollectiveCost(0.0, 0, 0)
     if is_array(data_volume):
         if np.all(data_volume <= 0):
             return CollectiveCost(0.0, 0, 0)
-    elif data_volume <= 0:
+    elif data_volume <= 0:  # scalar-ok: is_array branch above
         return CollectiveCost(0.0, 0, 0)
     if col_type not in COLLECTIVE_TYPES:
         raise ValueError(f"unknown collective type {col_type!r}")
@@ -268,6 +268,6 @@ def noc_latency(cost: CollectiveCost, noc: NoCParams) -> float:
         lat = (noc.t_router * cost.hops
                + noc.t_enq * (cost.volume_bytes / noc.channel_width))
         return np.where(cost.volume_bytes > 0, lat, 0.0)
-    if cost.volume_bytes <= 0:
+    if cost.volume_bytes <= 0:  # scalar-ok: is_array returned above
         return 0.0
     return noc.t_router * cost.hops + noc.t_enq * (cost.volume_bytes / noc.channel_width)

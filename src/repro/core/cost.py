@@ -31,9 +31,8 @@ the per-core systolic grid); lanes × frequency for SIMD.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 from .collectives import collective_cost, noc_latency
 from .hardware import Arch
@@ -223,7 +222,7 @@ class CostModel:
         if parent_level is not None:
             lvl = self.arch.level(node.level)
             parent = self.arch.level(parent_level)
-            eff_bw = min(lvl.bandwidth, parent.bandwidth)
+            eff_bw = min(lvl.bandwidth, parent.bandwidth)  # scalar-ok: arch params
             sp_factors = {lp.dim: lp.factor for lp in node.spatial_loops}
 
             def _traffic(t: str) -> Tuple[float, float]:

@@ -18,9 +18,8 @@ published-ballpark constants (documented inline); see DESIGN.md §8 —
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, fields, replace
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass, fields
+from typing import Optional, Tuple
 
 __all__ = [
     "MemLevel",

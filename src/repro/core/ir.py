@@ -20,9 +20,8 @@ beyond-paper optimization that reduces only the M×1 statistics vectors.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -31,7 +30,7 @@ from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Loop, Node, TileNode, Tiling
 from .numerics import ceil_div, is_array, vmax, vmin
 from .validate import validate_headroom_levels
-from .workload import CompoundOp, Operation, TensorSpec
+from .workload import CompoundOp, Operation
 
 __all__ = ["MappingSpec", "build_tree", "evaluate_mapping", "MappingResult"]
 

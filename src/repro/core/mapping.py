@@ -18,14 +18,13 @@ iteration counts are consistent by construction.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from .numerics import ceil_div, is_array, vmax
-from .workload import CompoundOp, Operation, TensorSpec
+from .workload import Operation, TensorSpec
 
 __all__ = [
     "Loop",
@@ -54,7 +53,7 @@ class Loop:
     def __post_init__(self) -> None:
         # Batched evaluation passes an array of factors; bounds are then
         # enforced by the grid construction, not per-Loop.
-        if not is_array(self.factor) and self.factor < 1:
+        if not is_array(self.factor) and self.factor < 1:  # scalar-ok
             raise ValueError(f"loop factor must be >=1, got {self.factor}")
 
 
@@ -102,7 +101,7 @@ class Tiling:
         if out is None:
             p = 1
             for lvl in LEVEL_ORDER:
-                if lvl == level:
+                if lvl == level:  # scalar-ok: level names are strings
                     break
                 p *= self.temporal[lvl].get(dim, 1)
                 p *= self.spatial[lvl].get(dim, 1)
@@ -119,7 +118,7 @@ class Tiling:
             for lvl in LEVEL_ORDER:
                 p *= self.temporal[lvl].get(dim, 1)
                 p *= self.spatial[lvl].get(dim, 1)
-                if lvl == level:
+                if lvl == level:  # scalar-ok: level names are strings
                     break
             out = self._memo[key] = vmax(1, ceil_div(self.dim_sizes[dim], p))
         return out
@@ -139,7 +138,7 @@ class Tiling:
             f = self.factors_of(d)
             if is_array(f):
                 raise TypeError("use overfactor_mask() for batched tilings")
-            if f > size:
+            if f > size:  # scalar-ok: is_array(f) raised above
                 raise ValueError(
                     f"dim {d}: product of factors {f} exceeds size {size}")
 

@@ -35,14 +35,14 @@ def vmax(a, b):
     """Elementwise max that preserves Python scalars on the scalar path."""
     if is_array(a) or is_array(b):
         return np.maximum(a, b)
-    return a if a >= b else b
+    return a if a >= b else b  # scalar-ok: the scalar fallback itself
 
 
 def vmin(a, b):
     """Elementwise min that preserves Python scalars on the scalar path."""
     if is_array(a) or is_array(b):
         return np.minimum(a, b)
-    return a if a <= b else b
+    return a if a <= b else b  # scalar-ok: the scalar fallback itself
 
 
 def vwhere(mask, a, b):

@@ -12,7 +12,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from .hardware import Arch
-from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
+from .mapping import CollectiveNode, Node, TileNode, Tiling
 from .numerics import vmin
 from .workload import TensorSpec
 

@@ -26,14 +26,14 @@ constraints:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import yaml
 
 from . import hardware, workload
 from .hardware import Arch
-from .ir import MappingResult, MappingSpec, evaluate_mapping
-from .search import SearchResult, search
+from .ir import MappingSpec, evaluate_mapping
+from .search import search
 from .workload import CompoundOp
 
 __all__ = ["load_spec", "run_spec", "parse_workload", "parse_arch",

@@ -11,7 +11,6 @@ Requires block_m * N * 4B to fit VMEM (validated by autotune).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

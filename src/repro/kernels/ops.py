@@ -9,11 +9,9 @@ anyway).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention

@@ -106,6 +106,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     rec["lower_compile_s"] = round(time.time() - t0, 1)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [per-device dict]
+        ca = ca[0] if ca else {}
     rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
                             if isinstance(v, (int, float))
                             and k in ("flops", "bytes accessed",
@@ -159,6 +161,28 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     if rec.get("structural_flops_per_device"):
         rec["useful_flop_ratio"] = (rec["model_flops_per_device"]
                                     / rec["structural_flops_per_device"])
+
+    # --- static contract verdict (repro.analysis.contracts): trace the
+    # sharded softmax path on THIS cell's mesh and audit its collective
+    # schedule against the planner's declaration — the roofline numbers
+    # above are only trustworthy if the cost model and the traced program
+    # agree on what goes over the wire.
+    from repro.analysis.contracts import sharded_contract_checks
+    try:
+        dp = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                dp *= int(mesh.shape[ax])
+        p_model = int(mesh.shape.get("model", 1))
+        cchecks = sharded_contract_checks(
+            mesh, batch=2 * dp, seq=16, d_model=64, vocab_p=128 * p_model)
+        rec["contracts"] = {
+            "checked": len(cchecks),
+            "failures": [c.to_dict() for c in cchecks if not c.ok],
+            "ok": all(c.ok for c in cchecks),
+        }
+    except Exception as e:  # noqa: BLE001 — verdict must not sink the cell
+        rec["contracts"] = {"error": repr(e), "ok": False}
     return rec
 
 
@@ -211,11 +235,15 @@ def main() -> None:
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 r = rec["roofline"]
+                c = rec.get("contracts", {})
+                verdict = ("contracts=ok" if c.get("ok")
+                           else f"contracts=FAIL({len(c.get('failures', []))}"
+                                f"{' ' + c['error'] if 'error' in c else ''})")
                 print(f"OK  {arch:22s} {shape:12s} {mk:6s} "
                       f"compile={rec['lower_compile_s']:7.1f}s "
                       f"bottleneck={r['bottleneck']:10s} "
                       f"t=({r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
-                      f"{r['t_collective_s']:.3e})s", flush=True)
+                      f"{r['t_collective_s']:.3e})s {verdict}", flush=True)
             except Exception as e:  # noqa: BLE001 — sweep must continue
                 failures.append((arch, shape, mk, repr(e)))
                 print(f"FAIL {arch} {shape} {mk}: {e}", flush=True)

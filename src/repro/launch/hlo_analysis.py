@@ -1,172 +1,9 @@
-"""Compiled-HLO analysis for the roofline (§Roofline).
-
-``cost_analysis()`` provides FLOPs / bytes-accessed of the (per-device,
-SPMD-partitioned) module; collective traffic is NOT included there, so we
-parse the optimized HLO text and sum operand sizes of every all-gather /
-all-reduce / reduce-scatter / all-to-all / collective-permute, weighting by
-the wire factor of each collective type ((G-1)/G patterns of ring/rec-dbl
-algorithms) using the replica-group size parsed per op.
-"""
-from __future__ import annotations
-
-import math
-import re
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+"""Compat shim: the HLO collective parser moved to
+:mod:`repro.analysis.hlo` (async ``-start``/``-done`` aware, knows
+``ragged-all-to-all``).  Import from ``repro.analysis`` in new code."""
+from repro.analysis.hlo import (CollectiveStats, HW,  # noqa: F401
+                                parse_collectives, roofline_terms,
+                                shape_bytes, shape_elements_bytes)
 
 __all__ = ["CollectiveStats", "parse_collectives", "shape_bytes",
-           "HW", "roofline_terms"]
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_OP_RE = re.compile(
-    r"=\s*(\(?[\w\[\],\s{}:#]*?\)?)\s*"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
-_GROUPS_LITERAL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
-
-
-def shape_bytes(shape_str: str) -> int:
-    """Total bytes of an HLO shape string like 'bf16[16,4096]' or a tuple
-    '(bf16[4], f32[8,2])'."""
-    total = 0
-    for m in _SHAPE_RE.finditer(shape_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclass
-class CollectiveStats:
-    # per type: [count, raw output bytes, wire bytes (top-level),
-    #            wire bytes inside while-loop bodies (counted ONCE by XLA —
-    #            scale by the loop trip count, i.e. the layer count)]
-    by_type: Dict[str, List[float]] = field(default_factory=dict)
-
-    @property
-    def total_wire_bytes(self) -> float:
-        return sum(v[2] + v[3] for v in self.by_type.values())
-
-    @property
-    def total_raw_bytes(self) -> float:
-        return sum(v[1] for v in self.by_type.values())
-
-    def wire_bytes_scaled(self, loop_trip: int) -> float:
-        """Per-device wire bytes with in-loop collectives × trip count."""
-        return sum(v[2] + v[3] * loop_trip for v in self.by_type.values())
-
-    def to_dict(self) -> Dict:
-        return {k: {"count": v[0], "raw_bytes": v[1], "wire_bytes": v[2],
-                    "wire_bytes_in_loop": v[3]}
-                for k, v in self.by_type.items()}
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_LITERAL_RE.search(line)
-    if m:
-        return len([x for x in m.group(1).split(",") if x.strip() != ""])
-    return 1
-
-
-def _wire_factor(op: str, g: int) -> float:
-    if g <= 1:
-        return 0.0
-    if op == "all-reduce":
-        return 2.0 * (g - 1) / g
-    if op in ("all-gather", "all-to-all"):
-        return (g - 1) / g
-    if op == "reduce-scatter":
-        return (g - 1)          # output is 1/g of the input
-    if op == "collective-permute":
-        return 1.0
-    return 1.0
-
-
-_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
-_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
-
-
-def parse_collectives(hlo_text: str) -> CollectiveStats:
-    """Collective traffic, separating ops inside while-loop bodies (XLA
-    counts/emits those once; callers scale by the loop trip count)."""
-    lines = hlo_text.splitlines()
-    body_names = set()
-    for line in lines:
-        if " while(" in line or "= while(" in line:
-            m = _WHILE_BODY_RE.search(line)
-            if m:
-                body_names.add(m.group(1))
-
-    stats = CollectiveStats()
-    current = ""
-    for line in lines:
-        if not line.startswith(" "):
-            h = _COMP_HEADER_RE.match(line.strip())
-            if h:
-                current = h.group(1)
-            continue
-        if "all-" not in line and "reduce-scatter" not in line \
-                and "collective-permute" not in line:
-            continue
-        m = _OP_RE.search(line)
-        if not m:
-            continue
-        shape_str, op = m.group(1), m.group(2)
-        b = shape_bytes(shape_str)
-        g = _group_size(line)
-        wf = _wire_factor(op, g)
-        ent = stats.by_type.setdefault(op, [0, 0.0, 0.0, 0.0])
-        ent[0] += 1
-        ent[1] += b
-        if current in body_names:
-            ent[3] += b * wf
-        else:
-            ent[2] += b * wf
-    return stats
-
-
-# ------------------------------------------------------------- roofline
-
-# TPU v5e hardware constants (per chip)
-HW = {
-    "peak_flops_bf16": 197e12,     # FLOP/s
-    "hbm_bw": 819e9,               # B/s
-    "link_bw": 50e9,               # B/s per ICI link
-}
-
-
-def roofline_terms(flops_per_device: float, bytes_per_device: float,
-                   wire_bytes_per_device: float) -> Dict[str, float]:
-    """Three roofline terms in seconds (per-device quantities; the SPMD
-    module is per-device, so chips cancel out of the brief's formulas)."""
-    t_compute = flops_per_device / HW["peak_flops_bf16"]
-    t_memory = bytes_per_device / HW["hbm_bw"]
-    t_collective = wire_bytes_per_device / HW["link_bw"]
-    dominant = max(
-        (("compute", t_compute), ("memory", t_memory),
-         ("collective", t_collective)), key=lambda kv: kv[1])[0]
-    total = max(t_compute, t_memory, t_collective)
-    return {
-        "t_compute_s": t_compute,
-        "t_memory_s": t_memory,
-        "t_collective_s": t_collective,
-        "bottleneck": dominant,
-        "bound_s": total,
-        "compute_fraction": t_compute / total if total > 0 else 0.0,
-    }
+           "shape_elements_bytes", "HW", "roofline_terms"]

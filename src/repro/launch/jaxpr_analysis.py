@@ -1,89 +1,9 @@
-"""Structural FLOP counting from the jaxpr (scan-aware).
+"""Compat shim: the jaxpr walker moved to :mod:`repro.analysis.jaxpr`
+(it now counts collectives for the static contract checker as well as
+FLOPs).  Import from ``repro.analysis`` in new code."""
+from repro.analysis.jaxpr import (CollectiveRecord, TraceCounts,  # noqa: F401
+                                  count_flops, count_jaxpr,
+                                  structural_flops, trace_counts)
 
-XLA's ``cost_analysis()`` does not multiply while-loop bodies by their trip
-counts, so scanned-layer models under-report FLOPs by ~n_layers (observed
-useful_flop_ratio >> 1, see EXPERIMENTS §Roofline).  The jaxpr still knows
-every ``scan`` length statically, so we count matmul FLOPs exactly by
-walking it recursively with a trip-count multiplier.
-
-Counted: dot_general (2·M·N·K·batch), conv as dots.  Elementwise/reduce
-FLOPs are a few percent of LM totals and are not counted (documented).
-Returned FLOPs are GLOBAL (whole-program, pre-partitioning): divide by the
-device count for per-device numbers.
-"""
-from __future__ import annotations
-
-import math
-from typing import Any, Dict
-
-import jax
-import numpy as np
-
-__all__ = ["count_flops", "structural_flops"]
-
-
-def _dot_flops(eqn) -> float:
-    a, b = eqn.invars[0].aval, eqn.invars[1].aval
-    dims = eqn.params["dimension_numbers"]
-    (lc, rc), (lb, rb) = dims
-    batch = 1
-    for d in lb:
-        batch *= a.shape[d]
-    contract = 1
-    for d in lc:
-        contract *= a.shape[d]
-    m = 1
-    for i, s in enumerate(a.shape):
-        if i not in lc and i not in lb:
-            m *= s
-    n = 1
-    for i, s in enumerate(b.shape):
-        if i not in rc and i not in rb:
-            n *= s
-    return 2.0 * batch * m * n * contract
-
-
-def _walk(jaxpr, mult: float) -> float:
-    total = 0.0
-    for eqn in jaxpr.eqns:
-        prim = eqn.primitive.name
-        if prim == "dot_general":
-            total += mult * _dot_flops(eqn)
-        elif prim == "scan":
-            inner = eqn.params["jaxpr"].jaxpr
-            length = eqn.params["length"]
-            total += _walk(inner, mult * length)
-        elif prim == "while":
-            # conservative: body counted once (no static trip count);
-            # our models use scan, so this path is rare.
-            total += _walk(eqn.params["body_jaxpr"].jaxpr, mult)
-        elif prim == "shard_map":
-            sub = eqn.params.get("jaxpr")
-            if sub is not None:
-                inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
-                # shard_map body runs on EVERY device over 1/N of data: the
-                # global flop count is body × num_devices (mesh size)
-                mesh = eqn.params.get("mesh")
-                n = mesh.devices.size if mesh is not None else 1
-                total += _walk(inner, mult * n)
-        elif prim == "cond":
-            branches = eqn.params.get("branches", ())
-            if branches:
-                total += max(_walk(b.jaxpr, mult) for b in branches)
-        else:
-            # generic call-like primitives (pjit, remat2, custom_vjp, ...)
-            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
-            if sub is not None:
-                inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
-                total += _walk(inner, mult)
-    return total
-
-
-def count_flops(closed_jaxpr) -> float:
-    return _walk(closed_jaxpr.jaxpr, 1.0)
-
-
-def structural_flops(fn, *abstract_args, **abstract_kwargs) -> float:
-    """Global matmul FLOPs of ``fn`` traced on abstract inputs."""
-    cj = jax.make_jaxpr(fn)(*abstract_args, **abstract_kwargs)
-    return count_flops(cj)
+__all__ = ["count_flops", "structural_flops", "count_jaxpr",
+           "trace_counts", "TraceCounts", "CollectiveRecord"]

@@ -12,9 +12,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.registry import Shape
 from repro.models.config import ModelConfig
 from repro.models.model import Model
-from repro.parallel.sharding import (batch_sharding, batch_spec,
-                                     cache_shardings, param_shardings,
-                                     zero1_shardings)
+from repro.parallel.sharding import (batch_sharding, cache_shardings, param_shardings, zero1_shardings)
 
 __all__ = ["batch_specs", "state_specs", "cache_specs", "with_shardings"]
 

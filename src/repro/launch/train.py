@@ -20,7 +20,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.launch.mesh import make_host_mesh, make_production_mesh

@@ -1,9 +1,8 @@
 """Model configuration covering all assigned architecture families."""
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional
 
 __all__ = ["ModelConfig", "pad_to_multiple"]
 

@@ -7,7 +7,6 @@ Encoder layers are bidirectional; decoder layers add causal self-attention
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -1,7 +1,6 @@
 """Shared model layers: norms, RoPE, MLP, embeddings, loss."""
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -3,10 +3,9 @@ train/prefill/decode callables, uniform across all families."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from . import encdec, transformer

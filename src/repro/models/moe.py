@@ -16,7 +16,6 @@ Routing: softmax top-k (Qwen3-style, renormalized) or sigmoid+bias
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

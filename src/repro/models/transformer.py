@@ -20,8 +20,7 @@ from . import attention as attn
 from . import moe as moe_mod
 from . import ssm as ssm_mod
 from .config import ModelConfig
-from .layers import (apply_norm, cross_entropy_loss, embed_apply, embed_specs,
-                     mlp_apply, mlp_specs, norm_specs, unembed_apply)
+from .layers import (apply_norm, embed_apply, embed_specs, mlp_apply, mlp_specs, norm_specs, unembed_apply)
 from .param import ParamSpec
 
 __all__ = ["decoder_specs", "forward", "prefill", "decode", "init_cache",

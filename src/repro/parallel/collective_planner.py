@@ -15,7 +15,6 @@ TP/flash-decoding attention merges.  This module:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,41 @@ from repro.core.hardware import tpu_v5e
 
 F32 = jnp.float32
 
-__all__ = ["plan_softmax_strategy", "sharded_softmax_xent"]
+__all__ = ["softmax_collective_schedule", "plan_softmax_strategy",
+           "sharded_softmax_xent"]
+
+
+def softmax_collective_schedule(strategy: str, rows: int, cols: int,
+                                participants: int, *,
+                                dp_participants: int = 1):
+    """The DECLARED collective schedule of :func:`sharded_softmax_xent` —
+    the single source of truth that both the planner (which costs it) and
+    the static contract checker (``repro.analysis.contracts``, which
+    audits the traced jaxpr against it) consume.  If the implementation
+    gains or loses a collective, this list must change with it or the
+    contract check fails.
+
+    Returns ``[(col_type, dv_bytes, participants, count), ...]`` with DV
+    in the cost model's convention (full tensor for All-Reduce, gathered
+    result for All-Gather).  Stats and logits are f32 on the wire:
+    ``_local_logits`` upcasts before the gather, so the gather arm is
+    charged at 4 B/elem regardless of the input dtype.
+
+    distSM: three (rows,) f32 stat All-Reduces over the model axis — the
+    pmax of the running max, the psum of the exp-sums, and the psum of
+    the label logits.  SM/gather: one All-Gather of the (rows, cols/P)
+    f32 logit shards.  Both arms add two scalar loss-normalization
+    All-Reduces over the data axis when it exists.
+    """
+    calls = []
+    if participants > 1:
+        if strategy == "dist":
+            calls.append(("AllReduce", rows * 4.0, participants, 3))
+        else:
+            calls.append(("AllGather", rows * cols * 4.0, participants, 1))
+    if dp_participants > 1:
+        calls.append(("AllReduce", 4.0, dp_participants, 2))
+    return calls
 
 
 @functools.lru_cache(maxsize=1024)
@@ -37,21 +70,28 @@ def plan_softmax_strategy(rows: int, cols: int, participants: int,
     """COMET Eq. 3/4 comparison of the two softmax collective mappings.
 
     rows=M (tokens), cols=N (sharded softmax dim, e.g. padded vocab),
-    participants=#shards on the reduction axis.
-    distSM: 2 × AllReduce of (rows,) stats.
-    SM/gather: AllGather of (rows, cols/P) shards (then local softmax).
+    participants=#shards on the reduction axis.  Costs exactly the
+    collectives :func:`softmax_collective_schedule` declares (the data-
+    axis scalar psums are common to both arms and cancel).  dtype_bytes
+    is kept for call compatibility; the wire dtype is f32 either way
+    (see the schedule's docstring).
     """
     if participants <= 1:
         return "dist"
     arch = tpu_v5e()
     noc = arch.cluster_noc
 
-    def lat(col_type: str, dv: float) -> float:
-        cc = collective_cost(col_type, dv, participants, noc)
-        return cc.volume_bytes / noc.channel_bandwidth + noc_latency(cc, noc)
+    def lat(schedule) -> float:
+        total = 0.0
+        for col_type, dv, P, count in schedule:
+            cc = collective_cost(col_type, dv, P, noc)
+            total += count * (cc.volume_bytes / noc.channel_bandwidth
+                              + noc_latency(cc, noc))
+        return total
 
-    dist = 2.0 * lat("AllReduce", rows * 4)           # f32 stats (max, sum)
-    gather = lat("AllGather", rows * cols * dtype_bytes)
+    dist = lat(softmax_collective_schedule("dist", rows, cols, participants))
+    gather = lat(softmax_collective_schedule("gather", rows, cols,
+                                             participants))
     return "dist" if dist <= gather else "gather"
 
 

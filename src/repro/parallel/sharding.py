@@ -14,7 +14,7 @@ pattern at the XLA level).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np

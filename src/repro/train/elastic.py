@@ -20,7 +20,7 @@ from typing import Any, List, Optional, Sequence
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 __all__ = ["remesh", "shrink_mesh", "StragglerMonitor"]
 

@@ -8,9 +8,8 @@ and cast back).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,17 +8,14 @@ scheduler) and the COMET-planned explicit-collective loss
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from ..models.config import ModelConfig
-from ..models.layers import cross_entropy_loss
 from ..models.model import Model
-from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+from .optimizer import OptConfig, OptState, adamw_update
 
 __all__ = ["TrainState", "make_train_step", "make_loss_fn"]
 
