@@ -4,6 +4,14 @@ Reads artifacts/dryrun/*.json and prints, per (arch × shape × mesh):
 the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
 (useful-compute ratio) and the per-device memory analysis.  ``--markdown``
 emits the EXPERIMENTS.md table.
+
+The collective term uses the RECONCILED jaxpr/HLO wire volume when the
+artifact carries a ``reconcile`` section (written by ``launch/dryrun.py``
+since the train-step contract PR): the jaxpr walker's explicit
+collectives plus the declared GSPMD schedule, cross-checked against the
+HLO text parse, charging the larger side on disagreement.  The ``recon``
+column counts the reconciliation findings for the cell (0 = the two
+static views agree everywhere within tolerance).
 """
 from __future__ import annotations
 
@@ -39,6 +47,7 @@ def row(r: Dict) -> Dict:
     rf = r["roofline"]
     ca = r.get("cost_analysis", {})
     ma = r.get("memory_analysis", {})
+    rc = r.get("reconcile", {})
     per_dev_bytes = (ma.get("argument_size_in_bytes", 0)
                      + ma.get("temp_size_in_bytes", 0))
     return {
@@ -51,6 +60,12 @@ def row(r: Dict) -> Dict:
         "hlo_flops": ca.get("flops", 0.0),
         "mem_per_dev": per_dev_bytes,
         "compile_s": r.get("lower_compile_s", 0.0),
+        "wire_reconciled": rc.get("total_reconciled_wire",
+                                  r.get("collective_wire_per_device", 0.0)),
+        "wire_hlo": rc.get("total_hlo_wire",
+                           r.get("collective_wire_hlo_per_device", 0.0)),
+        "recon_findings": len(rc.get("findings", [])),
+        "recon_clean": bool(rc.get("clean", True)),
     }
 
 
@@ -59,20 +74,28 @@ def print_table(recs: List[Dict], markdown: bool = False) -> None:
     rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
     if markdown:
         print("| arch | shape | mesh | t_compute | t_memory | t_collective |"
-              " bottleneck | useful FLOP ratio | bytes/device |")
-        print("|---|---|---|---|---|---|---|---|---|")
+              " bottleneck | useful FLOP ratio | bytes/device |"
+              " wire/device (reconciled) | recon |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
         for x in rows:
+            recon = ("clean" if x["recon_clean"]
+                     else f"{x['recon_findings']} findings")
             print(f"| {x['arch']} | {x['shape']} | {x['mesh']} "
                   f"| {x['t_compute']:.3e} | {x['t_memory']:.3e} "
                   f"| {x['t_collective']:.3e} | **{x['bottleneck']}** "
-                  f"| {x['useful']:.2f} | {fmt_bytes(x['mem_per_dev'])} |")
+                  f"| {x['useful']:.2f} | {fmt_bytes(x['mem_per_dev'])} "
+                  f"| {fmt_bytes(x['wire_reconciled'])} | {recon} |")
     else:
         for x in rows:
+            recon = ("clean" if x["recon_clean"]
+                     else f"{x['recon_findings']}findings")
             print(f"roofline_{x['cell']},{x['t_compute']*1e6:.1f},"
                   f"mem={x['t_memory']*1e6:.1f}us;"
                   f"coll={x['t_collective']*1e6:.1f}us;"
                   f"bott={x['bottleneck']};useful={x['useful']:.2f};"
-                  f"bytes/dev={fmt_bytes(x['mem_per_dev'])}")
+                  f"bytes/dev={fmt_bytes(x['mem_per_dev'])};"
+                  f"wire/dev={fmt_bytes(x['wire_reconciled'])};"
+                  f"recon={recon}")
 
 
 def run_all() -> Dict:

@@ -54,9 +54,12 @@ The **analysis section** (schema v6, the static-analysis subsystem
 gates) runs the smoke-shape kernel/sharded trace contracts
 (``repro.analysis.contracts``) and the repo-invariant AST lint
 (``repro.analysis.lint``) and requires both to be clean — the same
-checks CI's ``static-analysis`` job runs standalone.
+checks CI's ``static-analysis`` job runs standalone.  Schema v7 adds
+``analysis.train``: the train-step collective contracts (dense + MoE
+audited against ``train_collective_schedule``) and the golden-fixture
+jaxpr/HLO reconciliation, both timed and gated.
 
-Emits ``BENCH_search.json`` (schema comet/search_throughput/v6, see
+Emits ``BENCH_search.json`` (schema comet/search_throughput/v7, see
 benchmarks/README.md) and prints ``name,us_per_call,derived`` CSV rows.
 Exits non-zero if the speedup floor or any invariant is violated.
 """
@@ -473,14 +476,18 @@ def chunking_bench(repeats: int = 2) -> Dict:
 
 
 def analysis_gates() -> Dict:
-    """Schema v6 gates: smoke-shape trace contracts + repo lint, timed.
+    """Schema v6/v7 gates: smoke-shape trace contracts + repo lint, timed.
 
     The contract arm resolves each kernel's MappingPlan and audits the
     traced jaxpr against the cost model; the lint arm runs every repo
-    invariant including the static VMEM-budget evaluation.  Any failure
-    fails the benchmark gate (and CI)."""
+    invariant including the static VMEM-budget evaluation.  Schema v7
+    adds the ``train`` section: the full train-step collective schedule
+    (dense + MoE) audited against the planner's declaration, and the
+    golden-fixture HLO reconciliation must be clean.  Any failure fails
+    the benchmark gate (and CI)."""
     from repro.analysis.contracts import (kernel_contract_checks,
-                                          sharded_contract_checks)
+                                          sharded_contract_checks,
+                                          train_contract_checks)
     from repro.analysis.lint import lint_repo
     smoke = {"gemm_epilogue_blocks": [(512, 4096, 128)],
              "attention_blocks": [(1024, 1024, 64)],
@@ -493,13 +500,117 @@ def analysis_gates() -> Dict:
     findings = lint_repo()
     lint_s = time.perf_counter() - t0
     failures = [c.to_dict() for c in checks if not c.ok]
+    train = train_gates()
     return {
         "contract_checks": len(checks),
         "contract_failures": failures,
         "contracts_s": contracts_s,
         "lint_findings": [f.to_dict() for f in findings],
         "lint_s": lint_s,
-        "ok": not failures and not findings,
+        "train": train,
+        "ok": not failures and not findings and train["ok"],
+    }
+
+
+def train_gates() -> Dict:
+    """Schema v7 ``analysis.train`` section: train-step contracts +
+    golden-fixture jaxpr/HLO reconciliation, timed.
+
+    * ``contracts_ok`` — the train arm (dense glm4 + qwen3 MoE traced on
+      the virtual-device mesh) matches ``train_collective_schedule``
+      exactly, including the MoE no-all-to-all invariant.
+    * ``reconcile_ok`` — the checked-in compiled 2x2 train-step HLO
+      fixture reconciles against its recorded jaxpr trace + declared
+      schedule: the dominant all-reduce volume must MATCH (the cost
+      model's wire numbers are real), and any finding must be one of the
+      understood benign kinds recorded in the fixture test.
+    """
+    import gzip
+    import os
+    import subprocess
+    import sys
+    from repro.analysis.hlo import parse_collectives
+    from repro.analysis.jaxpr import TraceCounts
+    from repro.analysis.reconcile import reconcile_cell
+    from repro.parallel.collective_planner import DeclaredCollective
+
+    t0 = time.perf_counter()
+    # This process's jax backend is already initialized (usually with a
+    # single CPU device), which would degrade the train arm's mesh to
+    # 1x1 and make the audit vacuous — so the contracts run in a
+    # subprocess that forces 8 virtual devices, exactly like the CLI.
+    script = (
+        "import os, json\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=8'\n"
+        "from repro.analysis.contracts import train_contract_checks\n"
+        "checks = train_contract_checks()\n"
+        "print(json.dumps({'n': len(checks), 'failures': "
+        "[c.to_dict() for c in checks if not c.ok]}))\n")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.abspath(src), env.get("PYTHONPATH")) if p)
+    try:
+        r = subprocess.run([sys.executable, "-c", script], env=env,
+                           capture_output=True, text=True, timeout=600)
+        out = json.loads(r.stdout)
+        n_checks, contract_failures = out["n"], out["failures"]
+    except Exception as e:  # noqa: BLE001 — sandboxes may forbid spawn
+        # degraded fallback: in-process on whatever mesh exists (1x1
+        # only exercises the invariant checks, not the schedule audit)
+        from repro.analysis.contracts import train_contract_checks
+        checks = train_contract_checks()
+        n_checks = len(checks)
+        contract_failures = [c.to_dict() for c in checks if not c.ok]
+        contract_failures and contract_failures[0].setdefault(
+            "note", f"subprocess unavailable: {e!r}")
+    contracts_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fix_dir = os.path.join(os.path.dirname(__file__), "..", "tests",
+                           "fixtures")
+    recon_ok = True
+    recon: Dict = {}
+    try:
+        with gzip.open(os.path.join(fix_dir, "train_step_2x2.hlo.txt.gz"),
+                       "rt") as fh:
+            hlo = fh.read()
+        with open(os.path.join(fix_dir, "train_step_2x2.json")) as fh:
+            side = json.load(fh)
+        trace = TraceCounts()
+        for c in side["jaxpr_trace"]["collectives"]:
+            trace.add_collective(c["type"], c["participants"], c["count"],
+                                 c["dv_bytes"], c["shard_bytes"])
+        sched = [DeclaredCollective(d["label"], d["type"], d["dv_bytes"],
+                                    d["participants"], d["count"],
+                                    d["origin"])
+                 for d in side["schedule"]]
+        report = reconcile_cell(trace, parse_collectives(hlo),
+                                schedule=sched,
+                                loop_trip=side["n_layers"])
+        recon = report.to_dict()
+        # the all-reduce bulk must reconcile as a match; other findings
+        # must be the understood GSPMD-resharding kinds, never a mismatch
+        ar = report.per_type.get("all-reduce")
+        recon_ok = (ar is not None and ar.status == "match"
+                    and not any(f["kind"] == "reconcile-mismatch"
+                                for f in report.findings))
+    except Exception as e:  # noqa: BLE001 — a broken fixture must gate
+        recon = {"error": repr(e)}
+        recon_ok = False
+    reconcile_s = time.perf_counter() - t0
+
+    return {
+        "contract_checks": n_checks,
+        "contract_failures": contract_failures,
+        "contracts_s": contracts_s,
+        "reconcile": recon,
+        "reconcile_s": reconcile_s,
+        "contracts_ok": not contract_failures,
+        "reconcile_ok": recon_ok,
+        "ok": not contract_failures and recon_ok,
     }
 
 
@@ -527,7 +638,7 @@ def run_all(out_path: str = "BENCH_search.json") -> Dict:
     chunking = chunking_bench()
     analysis = analysis_gates()
     result = {
-        "schema": "comet/search_throughput/v6",
+        "schema": "comet/search_throughput/v7",
         "speedup_floor": SPEEDUP_FLOOR,
         "spaces": spaces,
         "exhaustive_vs_randomized": pairs,

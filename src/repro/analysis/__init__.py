@@ -19,9 +19,13 @@ from .hlo import (CollectiveStats, HW, parse_collectives, roofline_terms,
                   shape_bytes)
 from .jaxpr import (CollectiveRecord, TraceCounts, count_flops, count_jaxpr,
                     structural_flops, trace_counts)
+from .reconcile import (ReconcileReport, expected_wire_from_schedule,
+                        expected_wire_from_trace, reconcile, reconcile_cell)
 
 __all__ = [
     "CollectiveStats", "HW", "parse_collectives", "roofline_terms",
     "shape_bytes", "CollectiveRecord", "TraceCounts", "count_flops",
     "count_jaxpr", "structural_flops", "trace_counts",
+    "ReconcileReport", "reconcile", "reconcile_cell",
+    "expected_wire_from_trace", "expected_wire_from_schedule",
 ]

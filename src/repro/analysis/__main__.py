@@ -1,9 +1,14 @@
-"""CLI: ``python -m repro.analysis [--contracts] [--lint] [--json PATH]``.
+"""CLI: ``python -m repro.analysis [--contracts[=ARMS]] [--lint] [--json PATH]``.
 
-With no arm flags, both arms run.  Output is a single JSON document
-(schema ``repro/static-analysis/v1``) on stdout (or ``--json PATH``);
-human-readable mismatch reports go to stderr.  Exit code is nonzero when
-any contract check or lint finding fails — the CI gate.
+With no arm flags, all contract arms plus the lint run.  ``--contracts``
+takes an optional comma-separated arm list from ``kernel``, ``sharded``,
+``train`` (or ``all``): ``--contracts=train`` audits the full train-step
+collective schedule (dense + MoE) against
+``parallel.collective_planner.train_collective_schedule``.  Output is a
+single JSON document (schema ``repro/static-analysis/v2``) on stdout (or
+``--json PATH``); human-readable mismatch reports go to stderr.  Exit
+code is nonzero when any contract check or lint finding fails — the CI
+gate.
 
 The contract arm needs a multi-device CPU mesh for the sharded checks, so
 this module sets ``--xla_force_host_platform_device_count=8`` before jax
@@ -23,15 +28,17 @@ import sys
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-SCHEMA = "repro/static-analysis/v1"
+SCHEMA = "repro/static-analysis/v2"
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Static contracts + repo-invariant lint")
-    ap.add_argument("--contracts", action="store_true",
-                    help="run only the trace-contract arm")
+    ap.add_argument("--contracts", nargs="?", const="all", default=None,
+                    metavar="ARMS",
+                    help="run the trace-contract arm; optional comma list "
+                         "of arms from kernel,sharded,train (default all)")
     ap.add_argument("--lint", action="store_true",
                     help="run only the AST lint arm")
     ap.add_argument("--no-sharded", action="store_true",
@@ -44,23 +51,28 @@ def main(argv=None) -> int:
     ap.add_argument("--json", metavar="PATH", default="-",
                     help="write the JSON report here (default: stdout)")
     args = ap.parse_args(argv)
-    run_contracts_arm = args.contracts or not args.lint
-    run_lint_arm = args.lint or not args.contracts
+    run_contracts_arm = args.contracts is not None or not args.lint
+    run_lint_arm = args.lint or args.contracts is None
 
     result = {"schema": SCHEMA}
     ok = True
 
     if run_contracts_arm:
-        from .contracts import DEFAULT_TOL, run_contracts
+        from .contracts import ARMS, DEFAULT_TOL, run_contracts
+        spec = args.contracts if args.contracts is not None else "all"
+        arms = tuple(ARMS) if spec == "all" else tuple(
+            a.strip() for a in spec.split(",") if a.strip())
+        if args.no_sharded:
+            arms = tuple(a for a in arms if a != "sharded")
         shapes = None
         if args.smoke:
             shapes = {"gemm_epilogue_blocks": [(512, 4096, 128)],
                       "attention_blocks": [(1024, 1024, 64)],
                       "ssd_chunk_len": [(4096, 64, 128)]}
-        report = run_contracts(shapes, sharded=not args.no_sharded,
+        report = run_contracts(shapes, arms=arms,
                                tol=args.tol if args.tol is not None
                                else DEFAULT_TOL)
-        result["contracts"] = report.to_dict()
+        result["contracts"] = dict(report.to_dict(), arms=list(arms))
         if not report.ok:
             print("contract mismatches:", file=sys.stderr)
             print(report.describe_failures(), file=sys.stderr)

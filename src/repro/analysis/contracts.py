@@ -39,6 +39,8 @@ from .jaxpr import TraceCounts, trace_counts
 
 __all__ = ["ContractCheck", "ContractReport", "gemm_flops",
            "kernel_contract_checks", "sharded_contract_checks",
+           "train_contract_checks", "train_trace",
+           "TRAIN_CONTRACT_CONFIGS", "ARMS",
            "run_contracts", "KERNEL_TRACERS"]
 
 DEFAULT_TOL = 0.02
@@ -344,10 +346,10 @@ def sharded_contract_checks(mesh=None, *, batch: int = 8, seq: int = 16,
 
     checks: List[ContractCheck] = []
     for strategy in strategies:
-        def fn(h_, w_, y_):
+        def fn(h_, w_, y_, _strategy=strategy):
             return sharded_softmax_xent(h_, w_, y_, mesh,
                                         real_vocab=real_vocab,
-                                        strategy=strategy)
+                                        strategy=_strategy)
 
         trace = trace_counts(fn, h, w, y)
         declared = softmax_collective_schedule(
@@ -403,14 +405,179 @@ def sharded_contract_checks(mesh=None, *, batch: int = 8, seq: int = 16,
     return checks
 
 
+# -------------------------------------------------------------- train arm
+
+
+# Representative train configs audited by the train arm: one dense, one
+# MoE (the two loss/combine regimes the declared schedule distinguishes).
+TRAIN_CONTRACT_CONFIGS: Tuple[str, ...] = ("glm4-9b", "qwen3-moe-30b-a3b")
+
+
+def train_trace(arch_id: str, mesh=None, *, batch: int = 8, seq: int = 16,
+                microbatches: int = 1, softmax_strategy: Optional[str] = None):
+    """(cfg, TraceCounts) of one abstract ``make_train_step`` trace.
+
+    Pure tracing — no compilation, no execution: the state/batch are
+    ``ShapeDtypeStruct`` specs from ``launch.specs``, so this runs in
+    milliseconds even for configs whose real parameters would not fit.
+    """
+    import jax
+    from repro.configs.registry import Shape, get_smoke_config
+    from repro.launch.specs import batch_specs, state_specs
+    from repro.models.model import Model
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import make_train_step
+
+    from .jaxpr import count_jaxpr
+
+    if mesh is None:
+        mesh = _default_mesh()
+    cfg = get_smoke_config(arch_id)
+    if softmax_strategy:
+        cfg = cfg.with_(softmax_strategy=softmax_strategy)
+    model = Model(cfg)
+    step = make_train_step(model, OptConfig(), mesh,
+                           microbatches=microbatches, use_planner_loss=True)
+    state_ab, _ = state_specs(model, mesh)
+    batch_ab = batch_specs(cfg, Shape("contract", seq, batch, "train"), mesh)
+    return cfg, count_jaxpr(jax.make_jaxpr(step)(state_ab, batch_ab))
+
+
+def train_contract_checks(mesh=None, *,
+                          configs: Sequence[str] = TRAIN_CONTRACT_CONFIGS,
+                          batch: int = 8, seq: int = 16,
+                          microbatches: int = 1,
+                          tol: float = DEFAULT_TOL,
+                          schedule_fn=None) -> List[ContractCheck]:
+    """Audit the full train-step collective schedule against the declared
+    :func:`~repro.parallel.collective_planner.train_collective_schedule`.
+
+    For each config the train step is traced abstractly on the CPU mesh
+    and every traced (type, participants) bucket with participants > 1 is
+    compared against the aggregated ``origin == "explicit"`` declaration:
+    occurrence counts exactly, wire bytes through ``collective_cost`` (the
+    cost model's own charge).  Traced-but-undeclared and declared-but-
+    untraced both fail.  The MoE "no token all-to-all" docstring claim is
+    a named invariant check.  ``schedule_fn`` substitutes a (deliberately
+    wrong) declaration in tests to prove drift is caught.
+    """
+    from repro.core.collectives import collective_cost
+    from repro.core.hardware import tpu_v5e
+    from repro.parallel.collective_planner import train_collective_schedule
+
+    if mesh is None:
+        mesh = _default_mesh()
+    if schedule_fn is None:
+        schedule_fn = train_collective_schedule
+    noc = tpu_v5e().cluster_noc
+
+    def wire(col_type: str, dv: float, P: int) -> float:
+        return collective_cost(col_type, dv, P, noc).volume_bytes
+
+    mesh_desc = "x".join(str(int(mesh.shape[a])) for a in mesh.axis_names)
+    checks: List[ContractCheck] = []
+    for arch_id in configs:
+        cfg, trace = train_trace(arch_id, mesh, batch=batch, seq=seq,
+                                 microbatches=microbatches)
+        sched = schedule_fn(cfg, mesh, batch, seq, microbatches=microbatches)
+        explicit = [d for d in sched
+                    if d.origin == "explicit" and d.participants > 1]
+        name = f"train[{arch_id},mesh={mesh_desc},mb={microbatches}]"
+        detail_base = {"arch": arch_id, "mesh": mesh_desc,
+                       "batch": batch, "seq": seq,
+                       "microbatches": microbatches,
+                       "schedule": [d.to_dict() for d in sched]}
+
+        traced = {k: r for k, r in trace.collectives.items() if k[1] > 1}
+        declared_by_key: dict = {}
+        for d in explicit:
+            agg = declared_by_key.setdefault(
+                (d.col_type, d.participants),
+                {"count": 0.0, "wire": 0.0, "labels": []})
+            agg["count"] += d.count
+            agg["wire"] += wire(d.col_type, d.dv_bytes * d.count,
+                                d.participants)
+            agg["labels"].append(d.label)
+        for (col_type, P), agg in sorted(declared_by_key.items()):
+            rec = traced.pop((col_type, P), None)
+            detail = dict(detail_base)
+            detail["participants"] = P
+            detail["collective"] = col_type
+            detail["declared_labels"] = agg["labels"]
+            detail["note"] = (
+                f"declared by train_collective_schedule entries "
+                f"{agg['labels']} (parallel/collective_planner.py); a count "
+                f"mismatch means the implementation gained/lost a "
+                f"collective or an AD-transpose rule changed — update the "
+                f"declaration with the implementation")
+            t_count = rec.count if rec else 0.0
+            t_dv = rec.dv_bytes if rec else 0.0
+            checks.append(_mk_check(f"{name}/{col_type}@P{P}",
+                                    "collective_count", agg["count"],
+                                    t_count, 0.0, detail))
+            checks.append(_mk_check(f"{name}/{col_type}@P{P}",
+                                    "collective_wire_bytes", agg["wire"],
+                                    wire(col_type, t_dv, P), tol, detail))
+        if traced:
+            detail = dict(detail_base)
+            detail["undeclared"] = [r.to_dict() for r in traced.values()]
+            detail["note"] = (
+                "traced collectives missing from train_collective_schedule "
+                "— the train step executes collectives the cost model "
+                "never charges; declare them (with origin='explicit') in "
+                "parallel/collective_planner.py")
+            extra_dv = sum(r.dv_bytes for r in traced.values())
+            checks.append(_mk_check(f"{name}/undeclared",
+                                    "collective_volume", 0.0, extra_dv,
+                                    0.0, detail))
+        if cfg.is_moe:
+            # models/moe.py promises the EP combine is a psum — "no token
+            # all-to-all is required".  Checked, not just documented.
+            a2a = sum(r.count for r in trace.collectives.values()
+                      if r.col_type == "AllToAll")
+            detail = dict(detail_base)
+            detail["note"] = ("models/moe.py claims the expert combine "
+                              "needs no token all-to-all; the traced train "
+                              "step must contain zero AllToAll ops")
+            checks.append(_mk_check(f"{name}/moe-no-all-to-all",
+                                    "collective_count", 0.0, a2a, 0.0,
+                                    detail))
+        # A train step must be statically countable: any while-unbounded
+        # finding means the totals above are lower bounds, not contracts.
+        detail = dict(detail_base)
+        detail["findings"] = list(trace.findings)
+        checks.append(_mk_check(f"{name}/statically-bounded",
+                                "analysis_findings", 0.0,
+                                float(len(trace.findings)), 0.0, detail))
+    return checks
+
+
 # ------------------------------------------------------------------ entry
 
 
+ARMS = ("kernel", "sharded", "train")
+
+
 def run_contracts(shapes=None, *, sharded: bool = True,
+                  arms: Optional[Sequence[str]] = None,
                   tol: float = DEFAULT_TOL) -> ContractReport:
-    """Both contract arms as one report (the CLI and CI entry point)."""
+    """Selected contract arms as one report (the CLI and CI entry point).
+
+    ``arms`` selects from ``("kernel", "sharded", "train")``; when None,
+    the legacy ``sharded`` flag picks kernel(+sharded) for backward
+    compatibility with pre-train-arm callers.
+    """
+    if arms is None:
+        arms = ("kernel", "sharded") if sharded else ("kernel",)
+    unknown = set(arms) - set(ARMS)
+    if unknown:
+        raise ValueError(f"unknown contract arms {sorted(unknown)}; "
+                         f"pick from {ARMS}")
     report = ContractReport()
-    report.checks.extend(kernel_contract_checks(shapes, tol=tol))
-    if sharded:
+    if "kernel" in arms:
+        report.checks.extend(kernel_contract_checks(shapes, tol=tol))
+    if "sharded" in arms:
         report.checks.extend(sharded_contract_checks(tol=tol))
+    if "train" in arms:
+        report.checks.extend(train_contract_checks(tol=tol))
     return report

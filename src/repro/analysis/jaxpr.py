@@ -20,7 +20,10 @@ Trip-count multipliers
 ----------------------
 ``scan``       body × ``length`` — nested scans multiply (outer × inner),
                pinned by a regression test.
-``while``      body × 1 (no static trip count; documented conservative).
+``while``      body × the static trip count when the loop is the bounded
+               counter pattern (``i < literal`` cond, literal step/init);
+               otherwise body × 1 with an explicit ``while-unbounded``
+               finding in :attr:`TraceCounts.findings` (never silence).
 ``shard_map``  FLOPs × mesh device count (body runs on every device over
                1/N of the data; global FLOPs = body × N).  Collectives are
                **not** multiplied: N devices execute one *logical*
@@ -57,6 +60,12 @@ _PRIM_TO_TYPE = {
     "pmax": "AllReduce",
     "pmin": "AllReduce",
     "all_gather": "AllGather",
+    # jax.lax.psum_scatter binds a primitive named ``reduce_scatter``; the
+    # ``psum_scatter`` alias is kept for jax versions that use the API name.
+    # (Before PR 8 only the alias was listed, so every traced Reduce-Scatter
+    # — e.g. the transpose of the gather-arm softmax All-Gather — was
+    # silently dropped from the contract audit.)
+    "reduce_scatter": "ReduceScatter",
     "psum_scatter": "ReduceScatter",
     "all_to_all": "AllToAll",
     "ppermute": "Permute",
@@ -92,6 +101,13 @@ class TraceCounts:
     flops: float = 0.0
     collectives: Dict[Tuple[str, int], CollectiveRecord] = field(
         default_factory=dict)
+    # Non-fatal analysis findings, e.g. a ``while`` whose trip count could
+    # not be statically determined (body counted once — a lower bound).
+    # Each finding is {"kind": ..., "detail": ...}.
+    findings: list = field(default_factory=list)
+
+    def add_finding(self, kind: str, detail: str) -> None:
+        self.findings.append({"kind": kind, "detail": detail})
 
     def add_collective(self, col_type: str, participants: int, count: float,
                        dv_bytes: float, shard_bytes: float) -> None:
@@ -106,6 +122,7 @@ class TraceCounts:
 
     def merge(self, other: "TraceCounts") -> None:
         self.flops += other.flops
+        self.findings.extend(other.findings)
         for key, rec in other.collectives.items():
             mine = self.collectives.get(key)
             if mine is None:
@@ -119,6 +136,7 @@ class TraceCounts:
         """Per-type conservative merge for ``cond`` branches: keep the
         heavier branch's record for each (type, participants) key."""
         self.flops = max(self.flops, other.flops)
+        self.findings.extend(other.findings)
         for key, rec in other.collectives.items():
             mine = self.collectives.get(key)
             if mine is None or rec.dv_bytes > mine.dv_bytes:
@@ -146,7 +164,8 @@ class TraceCounts:
     def to_dict(self) -> Dict:
         return {"flops": self.flops,
                 "collectives": [r.to_dict() for _, r in
-                                sorted(self.collectives.items())]}
+                                sorted(self.collectives.items())],
+                "findings": list(self.findings)}
 
 
 def _dot_flops(eqn) -> float:
@@ -246,6 +265,72 @@ def _grid_product(params) -> float:
     return n
 
 
+def _literal_value(var):
+    """Concrete python value of a jaxpr Literal, else None."""
+    val = getattr(var, "val", None)
+    if val is None:
+        return None
+    try:
+        return float(np.asarray(val).reshape(()))
+    except Exception:
+        return None
+
+
+def _while_trip_count(eqn):
+    """Static trip count of a ``while`` eqn, or None if unbounded.
+
+    Recognizes the counter pattern ``lax.while_loop`` lowers bounded loops
+    to (and that ``fori_loop`` with traced-but-constant bounds produces):
+    the cond jaxpr is a single ``i < bound`` comparison of a carry slot
+    against a literal, and the body advances that slot by a literal step.
+    The initial counter value must be a literal at the call site.  Anything
+    else — data-dependent predicates, non-literal bounds — returns None and
+    the caller emits a ``while-unbounded`` finding.
+    """
+    try:
+        params = eqn.params
+        cond = params["cond_jaxpr"].jaxpr
+        body = params["body_jaxpr"].jaxpr
+        cn = int(params.get("cond_nconsts", 0))
+        bn = int(params.get("body_nconsts", 0))
+        pred = cond.outvars[0]
+        pred_eqn = None
+        for e in cond.eqns:
+            if pred in e.outvars:
+                pred_eqn = e
+        if pred_eqn is None or pred_eqn.primitive.name != "lt":
+            return None
+        ivar, bvar = pred_eqn.invars
+        bound = _literal_value(bvar)
+        carry = list(cond.invars[cn:])
+        if bound is None or ivar not in carry:
+            return None
+        idx = carry.index(ivar)
+        # the body must advance carry slot idx by a literal step
+        out_i = body.outvars[idx]
+        step_eqn = None
+        for e in body.eqns:
+            if out_i in e.outvars:
+                step_eqn = e
+        if step_eqn is None or step_eqn.primitive.name != "add":
+            return None
+        body_carry = list(body.invars[bn:])
+        step = None
+        for a, b in (step_eqn.invars, reversed(step_eqn.invars)):
+            if a is body_carry[idx]:
+                step = _literal_value(b)
+                break
+        if not step or step <= 0:
+            return None
+        init = _literal_value(eqn.invars[cn + bn + idx])
+        if init is None:
+            return None
+        import math
+        return max(0, int(math.ceil((bound - init) / step)))
+    except Exception:
+        return None
+
+
 def _mesh_axis_sizes(mesh) -> Dict[str, int]:
     try:
         return {str(k): int(v) for k, v in dict(mesh.shape).items()}
@@ -271,10 +356,18 @@ def _walk(jaxpr, flops_mult: float, coll_mult: float,
             _walk(inner, flops_mult * length, coll_mult * length,
                   axis_env, out)
         elif prim == "while":
-            # conservative: body counted once (no static trip count);
-            # our models use scan, so this path is rare.
-            _walk(eqn.params["body_jaxpr"].jaxpr, flops_mult, coll_mult,
-                  axis_env, out)
+            trip = _while_trip_count(eqn)
+            if trip is None:
+                # data-dependent trip count: body counted once (a lower
+                # bound) and flagged so downstream consumers know the
+                # totals under-count instead of silently trusting them.
+                out.add_finding(
+                    "while-unbounded",
+                    "while primitive has no static trip count; body "
+                    "counted once (flops/collectives are a lower bound)")
+                trip = 1
+            _walk(eqn.params["body_jaxpr"].jaxpr, flops_mult * trip,
+                  coll_mult * trip, axis_env, out)
         elif prim == "shard_map":
             sub = eqn.params.get("jaxpr")
             if sub is not None:

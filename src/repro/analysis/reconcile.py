@@ -1,0 +1,247 @@
+"""jaxpr-vs-HLO collective reconciliation (PR 8 tentpole, part 3).
+
+Two independent static views of a compiled cell's collective traffic
+exist in this repo:
+
+* the **jaxpr walker** (:mod:`repro.analysis.jaxpr`) sees the explicit
+  collectives our shard_map bodies emit (plus their AD transposes), in
+  the cost model's DV convention — exact counts, but blind to everything
+  GSPMD inserts during SPMD partitioning;
+* the **HLO text parse** (:mod:`repro.analysis.hlo`) sees every
+  collective XLA actually emitted — complete, but a lossy text heuristic
+  (async pairs, while-body scaling, tuple shapes).
+
+Neither alone is trustworthy enough to feed the roofline: the jaxpr side
+under-counts (GSPMD invisible), the HLO side mis-counts when the parse
+heuristics slip or XLA rewrites a collective (all-reduce ->
+reduce-scatter + all-gather reassociation).  This module compares the two
+per HLO op type — with the declared ``origin == "gspmd"`` schedule
+entries from :func:`~repro.parallel.collective_planner.
+train_collective_schedule` filling in what the jaxpr cannot see — and
+produces **reconciled** per-type wire volumes plus explicit findings for
+every disagreement.  The reconciled total never undercharges: on a
+mismatch it takes the larger side.
+
+Both sides are normalized to *per-participant wire bytes* using the same
+ring/recursive-doubling factors :func:`repro.analysis.hlo._wire_factor`
+applies to the HLO parse, so a match means "the cost model and the
+compiled program agree on what each chip puts on the wire".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+from .hlo import CollectiveStats, _wire_factor
+from .jaxpr import TraceCounts
+
+__all__ = ["TypeReconciliation", "ReconcileReport", "reconcile",
+           "expected_wire_from_trace", "expected_wire_from_schedule",
+           "reconcile_cell", "HLO_OP_FOR_TYPE"]
+
+# COMET collective type -> optimized-HLO op name.
+HLO_OP_FOR_TYPE = {
+    "AllReduce": "all-reduce",
+    "AllGather": "all-gather",
+    "ReduceScatter": "reduce-scatter",
+    "AllToAll": "all-to-all",
+    "Permute": "collective-permute",
+}
+# ragged-all-to-all is the same logical type on the HLO side
+_TYPE_FOR_HLO_OP = {v: k for k, v in HLO_OP_FOR_TYPE.items()}
+_TYPE_FOR_HLO_OP["ragged-all-to-all"] = "AllToAll"
+
+DEFAULT_TOL = 0.25  # GSPMD layouts/paddings legitimately move volumes a bit
+
+
+def _wire_of(col_type: str, dv_bytes: float, participants: int) -> float:
+    """Per-participant wire bytes of one collective in the DV convention
+    of ``repro.analysis.jaxpr`` / ``DeclaredCollective``.
+
+    The HLO parse applies ``_wire_factor`` to the *result* bytes; our DV
+    is the result for All-Reduce/All-Gather/All-to-All/Permute but the
+    full *input* for Reduce-Scatter (whose result is input/P), so the
+    Reduce-Scatter factor (P-1) collapses to (P-1)/P x DV.
+    """
+    P = int(participants)
+    if P <= 1:
+        return 0.0
+    op = HLO_OP_FOR_TYPE.get(col_type)
+    if op is None:
+        return 0.0
+    if col_type == "ReduceScatter":
+        return _wire_factor(op, P) * (dv_bytes / P)
+    return _wire_factor(op, P) * dv_bytes
+
+
+def expected_wire_from_trace(trace: TraceCounts) -> Dict[str, float]:
+    """Per-HLO-op expected wire bytes from a jaxpr walk (explicit ops)."""
+    out: Dict[str, float] = {}
+    for (col_type, P), rec in trace.collectives.items():
+        op = HLO_OP_FOR_TYPE.get(col_type)
+        if op is None or P <= 1:
+            continue
+        out[op] = out.get(op, 0.0) + _wire_of(col_type, rec.dv_bytes, P)
+    return out
+
+
+def expected_wire_from_schedule(schedule: Iterable,
+                                origins: Iterable[str] = ("gspmd",),
+                                ) -> Dict[str, float]:
+    """Per-HLO-op expected wire bytes from ``DeclaredCollective`` entries.
+
+    Defaults to the ``gspmd`` origin only: explicit entries are already
+    present in the jaxpr trace, and adding both would double-charge.
+    """
+    origins = set(origins)
+    out: Dict[str, float] = {}
+    for d in schedule:
+        if d.origin not in origins or d.participants <= 1:
+            continue
+        op = HLO_OP_FOR_TYPE.get(d.col_type)
+        if op is None:
+            continue
+        out[op] = out.get(op, 0.0) + d.count * _wire_of(
+            d.col_type, d.dv_bytes, d.participants)
+    return out
+
+
+@dataclass
+class TypeReconciliation:
+    """Expected-vs-HLO verdict for one collective op type."""
+
+    hlo_op: str
+    expected_wire: float
+    hlo_wire: float
+    status: str            # match | mismatch | hlo-only | expected-only
+    reconciled_wire: float
+
+    @property
+    def rel_err(self) -> float:
+        base = max(abs(self.expected_wire), abs(self.hlo_wire))
+        return abs(self.expected_wire - self.hlo_wire) / base if base else 0.0
+
+    def to_dict(self) -> Dict:
+        return {"hlo_op": self.hlo_op, "expected_wire": self.expected_wire,
+                "hlo_wire": self.hlo_wire, "status": self.status,
+                "rel_err": self.rel_err,
+                "reconciled_wire": self.reconciled_wire}
+
+
+@dataclass
+class ReconcileReport:
+    per_type: Dict[str, TypeReconciliation] = field(default_factory=dict)
+    findings: List[Dict] = field(default_factory=list)
+    tolerance: float = DEFAULT_TOL
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+    @property
+    def total_reconciled_wire(self) -> float:
+        return sum(t.reconciled_wire for t in self.per_type.values())
+
+    @property
+    def total_hlo_wire(self) -> float:
+        return sum(t.hlo_wire for t in self.per_type.values())
+
+    @property
+    def total_expected_wire(self) -> float:
+        return sum(t.expected_wire for t in self.per_type.values())
+
+    def to_dict(self) -> Dict:
+        return {"clean": self.clean, "tolerance": self.tolerance,
+                "total_reconciled_wire": self.total_reconciled_wire,
+                "total_hlo_wire": self.total_hlo_wire,
+                "total_expected_wire": self.total_expected_wire,
+                "per_type": {k: t.to_dict()
+                             for k, t in sorted(self.per_type.items())},
+                "findings": list(self.findings)}
+
+    def describe_findings(self) -> str:
+        return "\n".join(f"[{f['kind']}] {f['detail']}"
+                         for f in self.findings)
+
+
+def reconcile(expected: Dict[str, float], stats: CollectiveStats, *,
+              loop_trip: int = 1,
+              tol: float = DEFAULT_TOL) -> ReconcileReport:
+    """Compare expected per-op wire bytes against an HLO parse.
+
+    ``loop_trip`` scales collectives XLA emitted inside while-loop bodies
+    (scanned layers compile to one body executed ``n_layers`` times).
+    Per op type the verdict is one of:
+
+    * ``match`` — within ``tol``; the roofline uses the HLO number.
+    * ``mismatch`` — both sides present but disagree; the roofline uses
+      the LARGER side (never undercharge) and a finding names the gap.
+    * ``hlo-only`` — XLA emitted collectives nothing declared (GSPMD
+      resharding, all-reduce reassociation); charged as parsed, flagged.
+    * ``expected-only`` — declared/traced ops absent from the HLO (XLA
+      eliminated a redundant transpose psum, or the parse missed an op);
+      charged as expected, flagged.
+    """
+    hlo_wire: Dict[str, float] = {}
+    for op, v in stats.by_type.items():
+        hlo_wire[op] = hlo_wire.get(op, 0.0) + v[2] + v[3] * loop_trip
+    # fold ragged-all-to-all into all-to-all for the comparison
+    if "ragged-all-to-all" in hlo_wire:
+        hlo_wire["all-to-all"] = (hlo_wire.get("all-to-all", 0.0)
+                                  + hlo_wire.pop("ragged-all-to-all"))
+
+    report = ReconcileReport(tolerance=tol)
+    for op in sorted(set(expected) | set(hlo_wire)):
+        e = float(expected.get(op, 0.0))
+        h = float(hlo_wire.get(op, 0.0))
+        if e == 0.0 and h == 0.0:
+            # zero-wire entries (single-participant groups) carry no signal
+            report.per_type[op] = TypeReconciliation(op, 0.0, 0.0,
+                                                     "match", 0.0)
+            continue
+        if e > 0.0 and h > 0.0:
+            base = max(e, h)
+            if abs(e - h) / base <= tol:
+                status, rec_wire = "match", h
+            else:
+                status, rec_wire = "mismatch", max(e, h)
+                report.findings.append({
+                    "kind": "reconcile-mismatch",
+                    "hlo_op": op,
+                    "detail": (f"{op}: declared/traced wire {e:.4g} B vs "
+                               f"HLO {h:.4g} B (rel_err "
+                               f"{abs(e - h) / base:.2f} > tol {tol:g}); "
+                               f"roofline charges the larger side")})
+        elif h > 0.0:
+            status, rec_wire = "hlo-only", h
+            report.findings.append({
+                "kind": "reconcile-hlo-only",
+                "hlo_op": op,
+                "detail": (f"{op}: HLO executes {h:.4g} wire bytes with no "
+                           f"declared or traced counterpart (GSPMD-inserted "
+                           f"resharding or collective rewrite)")})
+        else:
+            status, rec_wire = "expected-only", e
+            report.findings.append({
+                "kind": "reconcile-expected-only",
+                "hlo_op": op,
+                "detail": (f"{op}: {e:.4g} declared/traced wire bytes never "
+                           f"appear in the compiled HLO (XLA eliminated the "
+                           f"op, or the text parse missed it)")})
+        report.per_type[op] = TypeReconciliation(op, e, h, status, rec_wire)
+    return report
+
+
+def reconcile_cell(trace: Optional[TraceCounts], stats: CollectiveStats, *,
+                   schedule: Optional[Iterable] = None, loop_trip: int = 1,
+                   tol: float = DEFAULT_TOL) -> ReconcileReport:
+    """One-call reconciliation for a dry-run cell: expected = the jaxpr
+    walk's explicit collectives + the declared GSPMD-origin schedule
+    entries (if a schedule is provided), compared against the HLO parse."""
+    expected: Dict[str, float] = {}
+    if trace is not None:
+        expected = expected_wire_from_trace(trace)
+    if schedule is not None:
+        for op, w in expected_wire_from_schedule(schedule).items():
+            expected[op] = expected.get(op, 0.0) + w
+    return reconcile(expected, stats, loop_trip=loop_trip, tol=tol)

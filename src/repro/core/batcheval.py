@@ -484,7 +484,7 @@ def batch_to_shm(br: BatchResult, *, prefix: str = "cmbatch") -> ShmBatchRef:
         raise FileExistsError(
             f"could not allocate a fresh shm name under prefix {prefix!r}")
     try:
-        for (key, o, _dt, shape), (_key, a) in zip(metas, items):
+        for (_key_m, o, _dt, shape), (_key, a) in zip(metas, items):
             dst = np.ndarray(shape, dtype=a.dtype, buffer=shm.buf, offset=o)
             dst[...] = a
             del dst             # release the buffer export before close()

@@ -232,7 +232,8 @@ class _JsonBackend:
             self.root.mkdir(parents=True, exist_ok=True)
         except OSError as e:
             raise StoreError(
-                "store-dir", f"cannot create store dir {self.root}: {e!r}")
+                "store-dir",
+                f"cannot create store dir {self.root}: {e!r}") from e
         self._dir_ok = True
 
     def get(self, key: PlanKey) -> Optional[str]:
@@ -261,7 +262,8 @@ class _JsonBackend:
                 raise
         except OSError as e:
             raise StoreError("write",
-                             f"could not persist plan to {path}: {e!r}")
+                             f"could not persist plan to {path}: "
+                             f"{e!r}") from e
         return True
 
     def discard(self, key: PlanKey) -> bool:
@@ -428,7 +430,7 @@ class _SqliteBackend:
             except OSError as e:
                 raise StoreError(
                     "store-dir",
-                    f"cannot create store dir {self.root}: {e!r}")
+                    f"cannot create store dir {self.root}: {e!r}") from e
             try:
                 conn = self._open_rw()
             except sqlite3.DatabaseError as e:
@@ -475,7 +477,7 @@ class _SqliteBackend:
         except sqlite3.DatabaseError:
             raise StoreError("open",
                              f"cannot open plan store {self.db_path}: "
-                             f"{cause!r}")
+                             f"{cause!r}") from cause
         self.read_only = True
         self.write_ok = False
         _warn_once(("read-only", str(self.root)),
@@ -498,7 +500,8 @@ class _SqliteBackend:
         except OSError as e:
             raise StoreError("open",
                              f"corrupt plan store {self.db_path} "
-                             f"({cause!r}) and quarantine failed ({e!r})")
+                             f"({cause!r}) and quarantine failed "
+                             f"({e!r})") from e
         self.quarantined += 1
         _warn_once(("corrupt-db", str(self.root)),
                    f"PlanStore: quarantined corrupt database "
@@ -509,7 +512,7 @@ class _SqliteBackend:
         except sqlite3.DatabaseError as e:
             raise StoreError("open",
                              f"cannot recreate plan store after "
-                             f"quarantine: {e!r}")
+                             f"quarantine: {e!r}") from e
 
     # ----------------------------------------------------- retry plumbing
 
@@ -588,10 +591,10 @@ class _SqliteBackend:
             if _is_busy(e):
                 raise StoreError("busy",
                                  f"plan store busy after {BUSY_RETRIES} "
-                                 f"retries: {e!r}")
-            raise StoreError("write", f"plan write failed: {e!r}")
+                                 f"retries: {e!r}") from e
+            raise StoreError("write", f"plan write failed: {e!r}") from e
         except (sqlite3.Error, OSError) as e:
-            raise StoreError("write", f"plan write failed: {e!r}")
+            raise StoreError("write", f"plan write failed: {e!r}") from e
         return True
 
     def discard(self, key: PlanKey) -> bool:

@@ -38,9 +38,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
              tag: str = "") -> Dict[str, Any]:
     """Lower + compile one cell; returns the artifact dict."""
     import jax.numpy as jnp
+    from repro.analysis import (parse_collectives, reconcile_cell,
+                                roofline_terms, trace_counts)
     from repro.configs.registry import SHAPES, get_config
     from repro.launch import specs as S
-    from repro.launch.hlo_analysis import parse_collectives, roofline_terms
     from repro.models.model import Model
     from repro.train.optimizer import OptConfig
     from repro.train.train_step import make_train_step
@@ -88,19 +89,25 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
         compiled = lowered.compile()
 
-    # --- structural FLOPs from the jaxpr (scan-aware; see jaxpr_analysis)
-    from repro.launch.jaxpr_analysis import structural_flops
+    # --- structural FLOPs + explicit collectives from one jaxpr walk
+    # (scan-aware; repro.analysis.jaxpr — the launch/*_analysis shims are
+    # deprecated)
+    jaxpr_trace = None
     try:
         if shape.kind == "train":
-            sf = structural_flops(step, state_ab, batch_ab)
+            jaxpr_trace = trace_counts(step, state_ab, batch_ab)
         elif shape.kind == "prefill":
-            sf = structural_flops(lambda p, b: model.prefill(
+            jaxpr_trace = trace_counts(lambda p, b: model.prefill(
                 p, b, shape.seq_len, mesh), params_ab, batch_ab)
         else:
-            sf = structural_flops(lambda p, c, t: model.decode(p, c, t, mesh),
-                                  params_ab, cache_ab, tok)
+            jaxpr_trace = trace_counts(
+                lambda p, c, t: model.decode(p, c, t, mesh),
+                params_ab, cache_ab, tok)
+        sf = jaxpr_trace.flops
         rec["structural_flops_global"] = sf
         rec["structural_flops_per_device"] = sf / mesh.devices.size
+        if jaxpr_trace.findings:
+            rec["jaxpr_findings"] = list(jaxpr_trace.findings)
     except Exception as e:  # noqa: BLE001
         rec["structural_flops_error"] = repr(e)
 
@@ -138,9 +145,31 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         mem_traffic = (ma_.get("argument_size_in_bytes", 0)
                        + ma_.get("output_size_in_bytes", 0)
                        + ma_.get("temp_size_in_bytes", 0))
-    wire_pd = stats.wire_bytes_scaled(cfg.n_layers)
+    wire_pd_hlo = stats.wire_bytes_scaled(cfg.n_layers)
+    # --- jaxpr-vs-HLO reconciliation (repro.analysis.reconcile): compare
+    # the walker's explicit collectives + the declared GSPMD schedule
+    # against the HLO text parse; the roofline charges the RECONCILED
+    # volumes (never undercharging), with disagreements surfaced as
+    # findings in the artifact.
+    schedule = None
+    if shape.kind == "train":
+        try:
+            from repro.parallel.collective_planner import (
+                train_collective_schedule)
+            schedule = train_collective_schedule(
+                cfg, mesh, shape.global_batch, shape.seq_len,
+                microbatches=int((opt_flags or {}).get("microbatches", 1)),
+                planner_loss=bool(
+                    (opt_flags or {}).get("planner_loss", False)))
+        except Exception as e:  # noqa: BLE001 — declaration gap, not fatal
+            rec["schedule_error"] = repr(e)
+    recon = reconcile_cell(jaxpr_trace, stats, schedule=schedule,
+                           loop_trip=cfg.n_layers)
+    rec["reconcile"] = recon.to_dict()
+    wire_pd = recon.total_reconciled_wire
     rec["mem_traffic_per_device"] = mem_traffic
     rec["collective_wire_per_device"] = wire_pd
+    rec["collective_wire_hlo_per_device"] = wire_pd_hlo
     rec["roofline"] = roofline_terms(flops_pd, mem_traffic, wire_pd)
     rec["roofline_raw_hlo"] = roofline_terms(flops_raw, bytes_acc,
                                              stats.total_wire_bytes)
@@ -239,6 +268,9 @@ def main() -> None:
                 verdict = ("contracts=ok" if c.get("ok")
                            else f"contracts=FAIL({len(c.get('failures', []))}"
                                 f"{' ' + c['error'] if 'error' in c else ''})")
+                nrf = len(rec.get("reconcile", {}).get("findings", []))
+                verdict += (" recon=clean" if nrf == 0
+                            else f" recon={nrf} findings")
                 print(f"OK  {arch:22s} {shape:12s} {mk:6s} "
                       f"compile={rec['lower_compile_s']:7.1f}s "
                       f"bottleneck={r['bottleneck']:10s} "

@@ -1,9 +1,16 @@
 """Compat shim: the HLO collective parser moved to
 :mod:`repro.analysis.hlo` (async ``-start``/``-done`` aware, knows
 ``ragged-all-to-all``).  Import from ``repro.analysis`` in new code."""
+import warnings
+
 from repro.analysis.hlo import (CollectiveStats, HW,  # noqa: F401
                                 parse_collectives, roofline_terms,
                                 shape_bytes, shape_elements_bytes)
+
+warnings.warn(
+    "repro.launch.hlo_analysis is a deprecated compat shim; import from "
+    "repro.analysis (or repro.analysis.hlo) instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["CollectiveStats", "parse_collectives", "shape_bytes",
            "shape_elements_bytes", "HW", "roofline_terms"]

@@ -1,9 +1,16 @@
 """Compat shim: the jaxpr walker moved to :mod:`repro.analysis.jaxpr`
 (it now counts collectives for the static contract checker as well as
 FLOPs).  Import from ``repro.analysis`` in new code."""
+import warnings
+
 from repro.analysis.jaxpr import (CollectiveRecord, TraceCounts,  # noqa: F401
                                   count_flops, count_jaxpr,
                                   structural_flops, trace_counts)
+
+warnings.warn(
+    "repro.launch.jaxpr_analysis is a deprecated compat shim; import from "
+    "repro.analysis (or repro.analysis.jaxpr) instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["count_flops", "structural_flops", "count_jaxpr",
            "trace_counts", "TraceCounts", "CollectiveRecord"]

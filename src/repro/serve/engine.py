@@ -200,7 +200,7 @@ class ServeEngine:
 
         last, cache = self._refill_prefill(active, refill(), None, None)
 
-        for step in range(max_steps):
+        for _step in range(max_steps):
             if all(r is None or r.done for r in active) and not queue:
                 break
             tok = last[:, None].astype(jnp.int32)

@@ -1,0 +1,87 @@
+"""Regenerate the golden train-step fixture.
+
+Compiles the glm4-9b smoke train step (planner loss, ``dist`` softmax,
+B=8 S=16) on a 2x2 ``(data, model)`` mesh of virtual CPU devices and
+writes, next to this script:
+
+* ``train_step_2x2.hlo.txt.gz`` — the optimized-HLO text of the REAL
+  compiled step (gzipped; ~650 KB raw);
+* ``train_step_2x2.json`` — the sidecar: the jaxpr walker's trace, the
+  declared collective schedule, and the shape/mesh provenance.
+
+``tests/test_train_contracts.py`` replays the fixture through
+``parse_collectives`` -> ``reconcile_cell`` so CI pins the whole
+walker -> schedule -> HLO-parse -> reconciler chain without compiling
+anything.  Re-run this script (and commit both outputs) whenever the
+model code, the declared schedule, or the smoke config changes what the
+train step emits:
+
+    PYTHONPATH=src python tests/fixtures/regen_train_step_2x2.py
+
+The script prints the reconciliation report; regenerated fixtures must
+still show ``all-reduce: match`` and no ``reconcile-mismatch`` /
+``reconcile-expected-only`` findings, or the tests that consume them
+will (correctly) fail.
+"""
+import gzip
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import jax                                                    # noqa: E402
+import numpy as np                                            # noqa: E402
+from jax.sharding import Mesh                                 # noqa: E402
+
+from repro.analysis.hlo import parse_collectives              # noqa: E402
+from repro.analysis.jaxpr import count_jaxpr                  # noqa: E402
+from repro.analysis.reconcile import reconcile_cell           # noqa: E402
+from repro.configs.registry import Shape, get_smoke_config    # noqa: E402
+from repro.launch.specs import batch_specs, state_specs       # noqa: E402
+from repro.models.model import Model                          # noqa: E402
+from repro.parallel.collective_planner import (               # noqa: E402
+    train_collective_schedule)
+from repro.train.optimizer import OptConfig                   # noqa: E402
+from repro.train.train_step import make_train_step            # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+B, S = 8, 16
+
+
+def main() -> None:
+    cfg = get_smoke_config("glm4-9b").with_(softmax_strategy="dist")
+    model = Model(cfg)
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+    step = make_train_step(model, OptConfig(), mesh, use_planner_loss=True)
+    state_ab, _ = state_specs(model, mesh)
+    batch_ab = batch_specs(cfg, Shape("fixture", S, B, "train"), mesh)
+    with mesh:
+        compiled = jax.jit(step, donate_argnums=(0,)) \
+            .lower(state_ab, batch_ab).compile()
+    hlo = compiled.as_text()
+    tc = count_jaxpr(jax.make_jaxpr(step)(state_ab, batch_ab))
+    sched = train_collective_schedule(cfg, mesh, B, S)
+
+    with gzip.open(os.path.join(HERE, "train_step_2x2.hlo.txt.gz"),
+                   "wt") as fh:
+        fh.write(hlo)
+    side = {
+        "arch": "glm4-9b", "smoke": True, "softmax_strategy": "dist",
+        "mesh": {"data": 2, "model": 2}, "batch": B, "seq": S,
+        "n_layers": cfg.n_layers,
+        "jaxpr_trace": tc.to_dict(),
+        "schedule": [d.to_dict() for d in sched],
+    }
+    with open(os.path.join(HERE, "train_step_2x2.json"), "w") as fh:
+        json.dump(side, fh, indent=1)
+        fh.write("\n")
+
+    rep = reconcile_cell(tc, parse_collectives(hlo), schedule=sched,
+                         loop_trip=cfg.n_layers)
+    print(f"wrote fixture ({len(hlo)} HLO chars); reconciliation:")
+    print(json.dumps(rep.to_dict(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

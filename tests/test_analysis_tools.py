@@ -5,9 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import (HW, parse_collectives, roofline_terms,
-                                       shape_bytes)
-from repro.launch.jaxpr_analysis import count_flops, structural_flops
+from repro.analysis import (HW, count_flops, parse_collectives,
+                            roofline_terms, shape_bytes, structural_flops)
 
 
 # ------------------------------------------------------------- HLO parsing

@@ -109,13 +109,28 @@ def test_collective_count_scan_multiplier():
 def test_launch_shims_reexport():
     """launch/jaxpr_analysis + launch/hlo_analysis stay importable and
     hand back the moved implementations, not copies."""
+    import warnings
+
     import repro.analysis as an
-    from repro.launch import hlo_analysis as shim_h
-    from repro.launch import jaxpr_analysis as shim_j
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.launch import hlo_analysis as shim_h
+        from repro.launch import jaxpr_analysis as shim_j
     assert shim_j.structural_flops is an.structural_flops
     assert shim_j.trace_counts is an.trace_counts
     assert shim_h.parse_collectives is an.parse_collectives
     assert shim_h.shape_bytes is an.shape_bytes
+
+
+def test_launch_shims_warn_deprecation():
+    """Importing either compat shim emits DeprecationWarning (module-level,
+    so re-importing an already-loaded shim needs a reload to re-fire)."""
+    import importlib
+
+    from repro.launch import hlo_analysis, jaxpr_analysis
+    for shim in (jaxpr_analysis, hlo_analysis):
+        with pytest.warns(DeprecationWarning, match="deprecated compat shim"):
+            importlib.reload(shim)
 
 
 # ------------------------------------------------------------- HLO parser
@@ -276,7 +291,7 @@ def test_cli_smoke_multidevice():
         pytest.skip(f"sandbox cannot spawn the CLI subprocess: {e!r}")
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     data = json.loads(r.stdout)
-    assert data["schema"] == "repro/static-analysis/v1"
+    assert data["schema"] == "repro/static-analysis/v2"
     assert data["ok"] and data["contracts"]["ok"] and data["lint"]["ok"]
     names = [c["name"] for c in data["contracts"]["checks"]]
     # the sharded arm ran on a multi-device mesh (2x4 from 8 devices)
