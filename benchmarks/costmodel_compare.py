@@ -50,12 +50,19 @@ def steady_state_latency(root, arch, tiling, tensors) -> float:
 
 
 def _pearson(xs: List[float], ys: List[float]) -> float:
+    """Pearson r; 0.0 (not NaN, not a division blow-up) for series that
+    carry no correlation signal — fewer than two points, or either side
+    constant (zero variance).  Pinned by tests/test_calibrate.py."""
     n = len(xs)
+    if n < 2:
+        return 0.0
     mx, my = sum(xs) / n, sum(ys) / n
-    cov = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
     vx = math.sqrt(sum((x - mx) ** 2 for x in xs))
     vy = math.sqrt(sum((y - my) ** 2 for y in ys))
-    return cov / (vx * vy + 1e-12)
+    if vx == 0.0 or vy == 0.0:
+        return 0.0
+    cov = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    return cov / (vx * vy)
 
 
 def gemm_gemm(M: int, N: int, K: int, N2: int) -> CompoundOp:
@@ -157,12 +164,48 @@ def compound_compare() -> Dict:
             "energy_corr": en_corr, "energy_ratio": en_ratio}
 
 
+def collective_compare(jitter: float = 0.03, seed: int = 7) -> Dict:
+    """Predicted-vs-measured collectives: sweep the synthetic backend
+    with bounded jitter (a stand-in for a real mesh, same ``measure_fn``
+    contract), fit ``NoCParams`` with ``repro.calibrate``, and compare
+    the fitted model's Eq. 4 predictions against the measurements it was
+    trained on.  Correlation should be ~1 and the median relative error
+    within the jitter bound — the in-process half of the calibration
+    gate (the real-CPU half runs via the ``python -m repro.calibrate``
+    subprocess in search_throughput's calibration_gates)."""
+    from dataclasses import replace as _replace
+
+    from repro.calibrate import (fit_noc_params, predicted_seconds,
+                                 relative_errors, run_sweep,
+                                 synthetic_measure_fn)
+    from repro.core.hardware import tpu_v5e
+
+    ref = _replace(tpu_v5e().cluster_noc, mesh=(1, 8))
+    sweep = run_sweep(synthetic_measure_fn(ref, jitter=jitter, seed=seed),
+                      [2, 4, 8])
+    fit = fit_noc_params(sweep.points, ref)
+    pred = list(predicted_seconds(fit.points, fit.params))
+    meas = [p.seconds for p in fit.points]
+    corr = _pearson(pred, meas)
+    res = sorted(abs(r) for r in relative_errors(fit.points, fit.params))
+    med = res[len(res) // 2] if res else 0.0
+    print(f"collective_pred_vs_meas,{len(meas)},corr={corr:.4f};"
+          f"median_rel_err={med:.4f}(jitter={jitter});"
+          f"max_rel_err={fit.max_rel_err:.4f}")
+    return {"n": len(meas), "corr": float(corr),
+            "median_rel_err": float(med),
+            "max_rel_err": float(fit.max_rel_err), "jitter": jitter,
+            "degenerate": fit.degenerate}
+
+
 def run_all() -> Dict:
     print("# --- Fig 6(a,b): single-op vs Timeloop-style ---")
     a = single_op_compare()
     print("# --- Fig 6(c,d): compound vs TileFlow-style ---")
     b = compound_compare()
-    return {"single": a, "compound": b}
+    print("# --- predicted-vs-measured collectives (repro.calibrate) ---")
+    c = collective_compare()
+    return {"single": a, "compound": b, "collective": c}
 
 
 if __name__ == "__main__":

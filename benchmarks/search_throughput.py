@@ -59,7 +59,17 @@ checks CI's ``static-analysis`` job runs standalone.  Schema v7 adds
 audited against ``train_collective_schedule``) and the golden-fixture
 jaxpr/HLO reconciliation, both timed and gated.
 
-Emits ``BENCH_search.json`` (schema comet/search_throughput/v7, see
+The **calibration section** (schema v8, the ``repro.calibrate``
+subsystem gates) closes the measured-collective loop: synthetic
+ground-truth recovery (noise-free within 1%, 3%-jittered within 10%),
+the predicted-vs-measured collective error from costmodel_compare
+(median |rel err| gated), and the real ``python -m repro.calibrate
+--backend=cpu`` e2e in a subprocess — fitted params must predict the
+measured sweep within the gate, re-running must reuse the persisted
+``calibrated_noc.json`` bit-identically with zero new fits, and the
+sandboxed store must contain nothing else.
+
+Emits ``BENCH_search.json`` (schema comet/search_throughput/v8, see
 benchmarks/README.md) and prints ``name,us_per_call,derived`` CSV rows.
 Exits non-zero if the speedup floor or any invariant is violated.
 """
@@ -614,6 +624,131 @@ def train_gates() -> Dict:
     }
 
 
+# schema v8 calibration gates (repro.calibrate)
+RECOVERY_TOL_CLEAN = 0.01    # noise-free synthetic: params within 1%
+RECOVERY_TOL_JITTER = 0.10   # 3%-jittered synthetic: params within 10%
+COLLECTIVE_MEDIAN_GATE = 0.10  # pred-vs-meas median |rel err|, synthetic
+CPU_GATE_MEDIAN = 0.6        # real-CPU sweep: fitted model vs own sweep
+
+
+def calibration_gates() -> Dict:
+    """Schema v8 ``calibration`` section: the measured-collective
+    calibration loop, gated end to end.
+
+    * ``recovery`` — the fitter inverts a synthetic sweep generated from
+      known ``NoCParams``: noise-free must recover every timing constant
+      within ``RECOVERY_TOL_CLEAN``; bounded 3% jitter within
+      ``RECOVERY_TOL_JITTER`` (the hypothesis property tests pin the
+      same bounds point-wise; this gates them in the benchmark artifact).
+    * ``collective`` — costmodel_compare's predicted-vs-measured
+      section: the fitted model must track its jittered sweep with
+      median |rel err| <= ``COLLECTIVE_MEDIAN_GATE``.
+    * ``cpu`` — the real thing: ``python -m repro.calibrate
+      --backend=cpu`` in a subprocess (this process's jax backend is
+      already initialized with one device, same constraint as
+      ``train_gates``) against a sandboxed store.  The fitted params
+      must predict the measured sweep within ``CPU_GATE_MEDIAN``; a
+      second run must report ``reused: true`` / ``fits_solved: 0`` with
+      the store byte-identical and containing nothing but the one
+      calibration file.
+    """
+    import subprocess
+    import tempfile
+    from dataclasses import replace as _replace
+
+    from benchmarks.costmodel_compare import collective_compare
+    from repro.calibrate import (fit_noc_params, run_sweep,
+                                 synthetic_measure_fn)
+    from repro.core.hardware import tpu_v5e
+
+    true = _replace(tpu_v5e().cluster_noc, mesh=(1, 8))
+
+    def worst_param_err(jitter: float, seed: int) -> float:
+        sweep = run_sweep(synthetic_measure_fn(true, jitter=jitter,
+                                               seed=seed), [2, 4, 8])
+        fit = fit_noc_params(sweep.points, true)
+        p = fit.params
+        return max(abs(p.channel_bandwidth - true.channel_bandwidth)
+                   / true.channel_bandwidth,
+                   abs(p.t_router - true.t_router) / true.t_router,
+                   abs(p.t_enq - true.t_enq) / true.t_enq)
+
+    t0 = time.perf_counter()
+    clean_err = worst_param_err(0.0, 0)
+    jitter_err = worst_param_err(0.03, 3)
+    recovery = {
+        "clean_worst_rel_err": clean_err,
+        "clean_tol": RECOVERY_TOL_CLEAN,
+        "jitter_worst_rel_err": jitter_err,
+        "jitter_tol": RECOVERY_TOL_JITTER,
+        "ok": (clean_err <= RECOVERY_TOL_CLEAN
+               and jitter_err <= RECOVERY_TOL_JITTER),
+        "seconds": time.perf_counter() - t0,
+    }
+    print(f"calibration_recovery,0,clean={clean_err:.2e};"
+          f"jitter={jitter_err:.3f};ok={recovery['ok']}")
+
+    coll = collective_compare()
+    coll["gate"] = COLLECTIVE_MEDIAN_GATE
+    coll["ok"] = (not coll["degenerate"]
+                  and coll["median_rel_err"] <= COLLECTIVE_MEDIAN_GATE)
+
+    t0 = time.perf_counter()
+    cpu: Dict = {}
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.abspath(src), env.get("PYTHONPATH")) if p)
+    try:
+        with tempfile.TemporaryDirectory(prefix="repro-calib-bench-") as tmp:
+            cmd = [sys.executable, "-m", "repro.calibrate",
+                   "--backend=cpu", "--store", tmp,
+                   f"--gate-median={CPU_GATE_MEDIAN}", "--json"]
+            r1 = subprocess.run(cmd, env=env, capture_output=True,
+                                text=True, timeout=600)
+            s1 = json.loads(r1.stdout)
+            store_file = os.path.join(tmp, "calibrated_noc.json")
+            with open(store_file, "rb") as fh:
+                bytes1 = fh.read()
+            r2 = subprocess.run(cmd, env=env, capture_output=True,
+                                text=True, timeout=600)
+            s2 = json.loads(r2.stdout)
+            with open(store_file, "rb") as fh:
+                bytes2 = fh.read()
+            stray = sorted(set(os.listdir(tmp)) - {"calibrated_noc.json"})
+            cpu = {
+                "first": {k: s1[k] for k in
+                          ("reused", "fits_solved", "n_points",
+                           "median_rel_err", "max_rel_err", "gate_ok")},
+                "second": {k: s2[k] for k in
+                           ("reused", "fits_solved", "gate_ok")},
+                "gate_median": CPU_GATE_MEDIAN,
+                "bit_identical": bytes1 == bytes2,
+                "stray_files": stray,
+                "params": s1["params"],
+                "ok": (r1.returncode == 0 and r2.returncode == 0
+                       and s1["gate_ok"] and not s1["reused"]
+                       and s1["fits_solved"] == 1
+                       and s2["reused"] and s2["fits_solved"] == 0
+                       and bytes1 == bytes2 and not stray),
+            }
+    except Exception as e:  # noqa: BLE001 — sandboxes may forbid spawn
+        cpu = {"skipped": repr(e), "ok": True}
+    cpu["seconds"] = time.perf_counter() - t0
+    if "skipped" in cpu:
+        print(f"calibration_cpu,0,skipped={cpu['skipped']}")
+    else:
+        print(f"calibration_cpu,0,median={cpu['first']['median_rel_err']:.3f}"
+              f"(gate<={CPU_GATE_MEDIAN});reuse_bit_identical="
+              f"{cpu['bit_identical']};stray={len(cpu['stray_files'])};"
+              f"ok={cpu['ok']}")
+
+    ok = recovery["ok"] and coll["ok"] and cpu["ok"]
+    print(f"calibration_ok,0,{ok}")
+    return {"recovery": recovery, "collective": coll, "cpu": cpu, "ok": ok}
+
+
 def run_all(out_path: str = "BENCH_search.json") -> Dict:
     from benchmarks.paper_tables import PROVISIONING_GEMMS
 
@@ -637,8 +772,9 @@ def run_all(out_path: str = "BENCH_search.json") -> Dict:
     autotune = autotune_bench()
     chunking = chunking_bench()
     analysis = analysis_gates()
+    calibration = calibration_gates()
     result = {
-        "schema": "comet/search_throughput/v7",
+        "schema": "comet/search_throughput/v8",
         "speedup_floor": SPEEDUP_FLOOR,
         "spaces": spaces,
         "exhaustive_vs_randomized": pairs,
@@ -647,13 +783,15 @@ def run_all(out_path: str = "BENCH_search.json") -> Dict:
         "autotune": autotune,
         "chunking": chunking,
         "analysis": analysis,
+        "calibration": calibration,
         "ok": (all(s["speedup"] >= SPEEDUP_FLOOR for s in spaces)
                and all(p["ok"] for p in pairs)
                and prov["ok"]
                and executors["ok"]
                and autotune["ok"]
                and chunking["ok"]
-               and analysis["ok"]),
+               and analysis["ok"]
+               and calibration["ok"]),
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)

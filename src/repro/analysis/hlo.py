@@ -193,12 +193,21 @@ HW = {
 
 
 def roofline_terms(flops_per_device: float, bytes_per_device: float,
-                   wire_bytes_per_device: float) -> Dict[str, float]:
+                   wire_bytes_per_device: float,
+                   link_bw: float = None) -> Dict[str, float]:
     """Three roofline terms in seconds (per-device quantities; the SPMD
-    module is per-device, so chips cancel out of the brief's formulas)."""
+    module is per-device, so chips cancel out of the brief's formulas).
+
+    ``link_bw`` overrides the tabulated ICI link bandwidth — the dryrun
+    passes the measured-and-fitted channel bandwidth from a
+    ``repro.calibrate`` calibration here, so the collective term of the
+    roofline is charged at the bandwidth the harness actually observed
+    instead of the datasheet constant.
+    """
     t_compute = flops_per_device / HW["peak_flops_bf16"]
     t_memory = bytes_per_device / HW["hbm_bw"]
-    t_collective = wire_bytes_per_device / HW["link_bw"]
+    t_collective = wire_bytes_per_device / (link_bw if link_bw
+                                            else HW["link_bw"])
     dominant = max(
         (("compute", t_compute), ("memory", t_memory),
          ("collective", t_collective)), key=lambda kv: kv[1])[0]

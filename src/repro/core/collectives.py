@@ -54,6 +54,8 @@ from .numerics import is_array
 __all__ = [
     "CollectiveCost",
     "collective_cost",
+    "collective_latency_terms",
+    "collective_seconds",
     "noc_latency",
     "collective_cache_clear",
     "COLLECTIVE_TYPES",
@@ -260,6 +262,41 @@ def _mesh_avg_distance(noc: NoCParams) -> float:
         out = total / (r * c * (r * c - 1))
     _MESH_AVG_CACHE[noc] = out
     return out
+
+
+def collective_latency_terms(
+    col_type: str,
+    data_volume: float,
+    participants: int,
+    noc: NoCParams,
+) -> Tuple[CollectiveCost, float, float]:
+    """End-to-end seconds for ONE collective execution, decomposed.
+
+    Returns ``(cost, mem_lat, total)`` where ``mem_lat`` is the Eq. 1
+    MemLat term charged at the NoC channel bandwidth (the collective's
+    boundary-transfer time) and ``total = mem_lat + NoCLat`` is the full
+    Eq. 4 latency.  This is the single prediction the cost model
+    (:meth:`repro.core.cost.CostModel.collective_cost_node`) and the
+    measured-collective calibration loop (``repro.calibrate``) both
+    charge — the calibration fitter inverts exactly this formula, so a
+    fitted ``NoCParams`` fed back through here reproduces the measured
+    sweep by construction.  Array-polymorphic like :func:`collective_cost`.
+    """
+    cc = collective_cost(col_type, data_volume, participants, noc)
+    mem_lat = cc.volume_bytes / noc.channel_bandwidth
+    return cc, mem_lat, mem_lat + noc_latency(cc, noc)
+
+
+def collective_seconds(
+    col_type: str,
+    data_volume: float,
+    participants: int,
+    noc: NoCParams,
+) -> float:
+    """Eq. 4 total seconds for one collective (convenience over
+    :func:`collective_latency_terms`)."""
+    return collective_latency_terms(col_type, data_volume, participants,
+                                    noc)[2]
 
 
 def noc_latency(cost: CollectiveCost, noc: NoCParams) -> float:

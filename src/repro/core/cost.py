@@ -34,7 +34,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Tuple
 
-from .collectives import collective_cost, noc_latency
+from .collectives import collective_latency_terms
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
 from .numerics import ceil_div, is_array, reduce_max, vmax, vwhere
@@ -157,10 +157,10 @@ class CostModel:
         c = self._cost()
         noc = (self.arch.cluster_noc if node.noc_level == "GB"
                else self.arch.core_noc)
-        cc = collective_cost(node.col_type, node.data_volume_bytes,
-                             node.participants, noc)
-        mem_lat = cc.volume_bytes / noc.channel_bandwidth        # Eq. 1 (capped by NoC BW)
-        lat_once = mem_lat + noc_latency(cc, noc)                # Eq. 4
+        # Eq. 1 (capped by NoC BW) + Eq. 4 via the shared helper the
+        # calibration fitter inverts (bit-identical to inlining it here).
+        cc, mem_lat, lat_once = collective_latency_terms(
+            node.col_type, node.data_volume_bytes, node.participants, noc)
         c.latency = lat_once * node.count
         c.mem_lat = mem_lat * node.count
         if self.track_breakdown:

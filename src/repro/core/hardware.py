@@ -18,7 +18,7 @@ published-ballpark constants (documented inline); see DESIGN.md §8 —
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, fields
+from dataclasses import dataclass, fields, replace
 from typing import Optional, Tuple
 
 __all__ = [
@@ -27,6 +27,7 @@ __all__ = [
     "GemmUnit",
     "SimdUnit",
     "Arch",
+    "apply_calibration",
     "edge",
     "cloud",
     "tpu_v5e",
@@ -189,6 +190,62 @@ class Arch:
         return self.gemm_unit.peak_flops * self.total_cores
 
 
+# ----------------------------------------------------------- calibration
+
+
+def _coerce_calibrated_noc(calibrated) -> Optional[NoCParams]:
+    """Resolve a ``calibrated=`` argument to the NoCParams carrying the
+    measured timing constants.
+
+    Accepts a :class:`NoCParams`, a ``repro.calibrate`` ``Calibration``
+    (anything with a ``params`` NoCParams attribute), or a path to a
+    persisted ``calibrated_noc.json``.  Returns ``None`` when the path
+    holds no usable calibration (missing / stale / corrupt — the loader
+    already warned), so callers degrade to the preset constants.
+    """
+    if calibrated is None:
+        return None
+    if isinstance(calibrated, NoCParams):
+        return calibrated
+    params = getattr(calibrated, "params", None)
+    if isinstance(params, NoCParams):
+        return params
+    # a str/Path: load the persisted file (lazy import — repro.calibrate
+    # imports this module)
+    from repro.calibrate.persist import load_calibration
+    cal = load_calibration(calibrated)
+    return cal.params if cal is not None else None
+
+
+def apply_calibration(arch: Arch, calibrated, *,
+                      core_noc: bool = False) -> Arch:
+    """Return ``arch`` with its cluster NoC's *timing* constants replaced
+    by measured-and-fitted values (``repro.calibrate``).
+
+    Only the three fitted constants transfer — ``channel_bandwidth``,
+    ``t_router`` (per hop) and ``t_enq`` (per enqueue slot) — because
+    they are mesh-shape-independent; the preset's mesh geometry, channel
+    width and hop energy are kept.  ``core_noc=True`` additionally
+    applies the same constants to the core-level NoC.  The replaced
+    NoCParams flows through ``Arch.signature()``, so every downstream
+    cache (factor tables, search grids, plan fingerprints) sees the
+    calibrated machine as distinct from the preset.
+
+    A ``calibrated`` that resolves to nothing (e.g. a missing or stale
+    ``calibrated_noc.json``) returns ``arch`` unchanged.
+    """
+    noc = _coerce_calibrated_noc(calibrated)
+    if noc is None:
+        return arch
+    def patch(base: NoCParams) -> NoCParams:
+        return replace(base, channel_bandwidth=noc.channel_bandwidth,
+                       t_router=noc.t_router, t_enq=noc.t_enq)
+    out = replace(arch, cluster_noc=patch(arch.cluster_noc))
+    if core_noc:
+        out = replace(out, core_noc=patch(arch.core_noc))
+    return out
+
+
 # ---------------------------------------------------------------- presets
 
 
@@ -196,7 +253,7 @@ def _mk_mem(name: str, size: int, bw_gbs: float, re: float, we: float) -> MemLev
     return MemLevel(name, size, bw_gbs * GIGA, re, we)
 
 
-def edge() -> Arch:
+def edge(calibrated=None) -> Arch:
     """Table V 'Edge' column.
 
     DRAM 1 GB @ 25 GB/s; 2x2 clusters of 2x2 cores; GB 2 MB @ 2 TB/s;
@@ -204,8 +261,12 @@ def edge() -> Arch:
     64 GB/s, t_router 5 ns, t_enq 2 ns.
     Energy: DDR4 ~150 pJ/B (DRAMPower ballpark), MB-scale SRAM ~6 pJ/B,
     KB-scale SRAM ~1 pJ/B.
+
+    ``calibrated`` (a NoCParams / Calibration / ``calibrated_noc.json``
+    path) replaces the cluster NoC timing constants with measured ones
+    via :func:`apply_calibration`.
     """
-    return Arch(
+    arch = Arch(
         name="edge",
         dram=_mk_mem("DRAM", 1 << 30, 25, 150.0, 150.0),
         gb=_mk_mem("GB", 2 << 20, 2000, 6.0, 6.0),
@@ -217,11 +278,12 @@ def edge() -> Arch:
         gemm_unit=GemmUnit(32, 32, (8, 8), 1.0 * GIGA, 0.5),
         simd_unit=SimdUnit(256, 1.0 * GIGA, 0.3),
     )
+    return apply_calibration(arch, calibrated)
 
 
-def cloud() -> Arch:
+def cloud(calibrated=None) -> Arch:
     """Table V 'Cloud' column."""
-    return Arch(
+    arch = Arch(
         name="cloud",
         dram=_mk_mem("DRAM", 4 << 30, 50, 150.0, 150.0),
         gb=_mk_mem("GB", 8 << 20, 4000, 8.0, 8.0),
@@ -233,9 +295,10 @@ def cloud() -> Arch:
         gemm_unit=GemmUnit(32, 32, (8, 8), 1.0 * GIGA, 0.5),
         simd_unit=SimdUnit(256, 1.0 * GIGA, 0.3),
     )
+    return apply_calibration(arch, calibrated)
 
 
-def tpu_v5e(mesh: Tuple[int, int] = (16, 16)) -> Arch:
+def tpu_v5e(mesh: Tuple[int, int] = (16, 16), calibrated=None) -> Arch:
     """TPU-v5e adaptation (DESIGN.md §3).
 
     DRAM -> HBM (16 GB, 819 GB/s); GB -> VMEM (128 MB, ~8 TB/s on-chip);
@@ -247,7 +310,7 @@ def tpu_v5e(mesh: Tuple[int, int] = (16, 16)) -> Arch:
     """
     peak = 197e12
     freq = peak / (4 * 128 * 128 * 2)
-    return Arch(
+    arch = Arch(
         name="tpu_v5e",
         dram=_mk_mem("DRAM", 16 << 30, 819, 3.9, 3.9),   # HBM2e ~3.9 pJ/B
         gb=_mk_mem("GB", 128 << 20, 8000, 1.2, 1.2),      # VMEM
@@ -259,12 +322,13 @@ def tpu_v5e(mesh: Tuple[int, int] = (16, 16)) -> Arch:
         gemm_unit=GemmUnit(128, 128, (2, 2), freq, 0.15),
         simd_unit=SimdUnit(4096, 0.94 * GIGA, 0.1),
     )
+    return apply_calibration(arch, calibrated)
 
 
-def tileflow_like() -> Arch:
+def tileflow_like(calibrated=None) -> Arch:
     """The 3-level architecture used for the Fig. 6 cost-model comparison:
     DRAM, one on-chip buffer, one MAC array (single cluster/core)."""
-    return Arch(
+    arch = Arch(
         name="tileflow_like",
         dram=_mk_mem("DRAM", 4 << 30, 50, 150.0, 150.0),
         gb=_mk_mem("GB", 4 << 20, 2000, 6.0, 6.0),
@@ -278,6 +342,7 @@ def tileflow_like() -> Arch:
         gemm_unit=GemmUnit(32, 32, (1, 1), 1.0 * GIGA, 0.5),
         simd_unit=SimdUnit(256, 1.0 * GIGA, 0.3),
     )
+    return apply_calibration(arch, calibrated)
 
 
 PRESETS = {

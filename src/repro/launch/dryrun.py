@@ -35,8 +35,14 @@ def _mesh(kind: str):
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              *, opt_flags: Optional[Dict[str, Any]] = None,
-             tag: str = "") -> Dict[str, Any]:
-    """Lower + compile one cell; returns the artifact dict."""
+             tag: str = "", calibrated: Optional[str] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the artifact dict.
+
+    ``calibrated`` points at a ``repro.calibrate`` store (``True`` for
+    the default plan-store root): when a valid calibration loads, the
+    roofline's collective term is charged at the measured-and-fitted
+    channel bandwidth instead of the datasheet link constant, and the
+    artifact records which calibration was applied."""
     import jax.numpy as jnp
     from repro.analysis import (parse_collectives, reconcile_cell,
                                 roofline_terms, trace_counts)
@@ -170,7 +176,24 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     rec["mem_traffic_per_device"] = mem_traffic
     rec["collective_wire_per_device"] = wire_pd
     rec["collective_wire_hlo_per_device"] = wire_pd_hlo
-    rec["roofline"] = roofline_terms(flops_pd, mem_traffic, wire_pd)
+    link_bw = None
+    if calibrated:
+        from repro.calibrate import calibration_path, load_calibration
+        cal_path = (calibration_path() if calibrated is True
+                    else calibration_path(calibrated))
+        cal = load_calibration(cal_path)
+        if cal is not None:
+            link_bw = cal.params.channel_bandwidth
+            rec["calibration"] = {
+                "path": str(cal_path),
+                "backend": cal.provenance.get("backend"),
+                "channel_bandwidth": link_bw,
+                "median_rel_err": cal.median_rel_err,
+            }
+        else:
+            rec["calibration"] = {"path": str(cal_path), "loaded": False}
+    rec["roofline"] = roofline_terms(flops_pd, mem_traffic, wire_pd,
+                                     link_bw=link_bw)
     rec["roofline_raw_hlo"] = roofline_terms(flops_raw, bytes_acc,
                                              stats.total_wire_bytes)
     # MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); decode: D = batch
@@ -230,6 +253,12 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--calibrated", nargs="?", const=True, default=None,
+                    metavar="STORE",
+                    help="charge the roofline's collective term at the "
+                         "calibrated channel bandwidth from STORE (default: "
+                         "the plan-store root) instead of the datasheet "
+                         "link constant")
     ap.add_argument("--opt", default="",
                     help="comma k=v model-config overrides (hillclimb)")
     args = ap.parse_args()
@@ -260,7 +289,7 @@ def main() -> None:
                 continue
             try:
                 rec = run_cell(arch, shape, mk, opt_flags=opt_flags,
-                               tag=args.tag)
+                               tag=args.tag, calibrated=args.calibrated)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 r = rec["roofline"]

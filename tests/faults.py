@@ -26,6 +26,10 @@ Injection points
 * ``torn_file(path)``       truncate any file to a fraction of its size
                             (crash mid-write; also used for torn shm
                             segments)
+* ``faulty_measure_fn(fn)`` wrap a ``repro.calibrate`` measure_fn so
+                            chosen calls raise, return NaN, or return
+                            absurdly-fast timings (the sweep's fault
+                            matrix)
 * ``spawn_resolver(root)``  a real subprocess that resolves the
                             canonical plan against ``root`` and prints
                             its JSON — for multi-process writer races
@@ -176,6 +180,32 @@ def torn_file(path, keep=0.5) -> int:
     with open(path, "r+b") as f:
         f.truncate(new)
     return new
+
+
+def faulty_measure_fn(inner, *, fail_at, mode="raise"):
+    """Wrap a calibration ``measure_fn`` so calls ``fail_at`` (a 0-based
+    call index, or a set of them) misbehave: ``mode='raise'`` raises a
+    RuntimeError, ``'nan'`` returns NaN, ``'tiny'`` returns a
+    near-zero timing (the non-monotone fault — a 16 MiB collective
+    "finishing" in a nanosecond).  Everything else passes through to
+    ``inner``; the calibration sweep must degrade, never crash."""
+    fail = {fail_at} if isinstance(fail_at, int) else set(fail_at)
+    calls = {"n": -1}
+
+    def measure(col_type, dv_bytes, participants):
+        calls["n"] += 1
+        if calls["n"] in fail:
+            if mode == "raise":
+                raise RuntimeError(
+                    f"injected measurement fault at call {calls['n']}")
+            if mode == "nan":
+                return float("nan")
+            if mode == "tiny":
+                return 1e-12
+            raise ValueError(f"unknown fault mode {mode!r}")
+        return inner(col_type, dv_bytes, participants)
+
+    return measure
 
 
 # ------------------------------------------------------------ subprocesses

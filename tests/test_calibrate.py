@@ -1,0 +1,428 @@
+"""The measured-collective calibration loop (repro.calibrate).
+
+Covers the tentpole contract end to end: sweep-harness fault matrix
+(raise / NaN / non-monotone mid-sweep degrade to a partial fit, one
+warning per cause, never a crash), fitter ground-truth recovery
+(noise-free within 1%, bounded jitter within 10%, across pow2 and
+non-pow2 participant counts and degenerate meshes), persistence
+(bit-identical roundtrip, stale-provenance refusal, corrupt-file
+quarantine, NaN-residual write refusal), the ``Arch``
+``calibrated=`` override, the driver's reuse semantics, the
+``python -m repro.calibrate`` CLI, and the ``_pearson`` edge cases of
+benchmarks/costmodel_compare.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+import warnings
+from dataclasses import replace
+from pathlib import Path
+
+import pytest
+
+import faults
+from repro.calibrate import (CALIBRATED_TYPES, Calibration, MeasuredPoint,
+                             SweepConfig, calibrate_once,
+                             calibration_from_fit, fit_noc_params,
+                             load_calibration, log_sizes, relative_errors,
+                             run_sweep, save_calibration,
+                             synthetic_measure_fn)
+from repro.calibrate import harness as harness_mod
+from repro.core.collectives import (collective_cost, collective_latency_terms,
+                                    collective_seconds, noc_latency)
+from repro.core.hardware import apply_calibration, tpu_v5e
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT))
+from benchmarks.costmodel_compare import _pearson  # noqa: E402
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # pragma: no cover
+    given = None
+
+
+REF = replace(tpu_v5e().cluster_noc, mesh=(1, 8))
+FAST = SweepConfig(n_sizes=4, iters=2, warmup=0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """Per-test warn-once registry (production semantics are
+    per-process; tests assert per-cause counts)."""
+    harness_mod._reset_warned()
+    yield
+    harness_mod._reset_warned()
+
+
+def _rel(a, b):
+    return abs(a - b) / abs(b)
+
+
+def _worst_err(fit, true):
+    p = fit.params
+    return max(_rel(p.channel_bandwidth, true.channel_bandwidth),
+               _rel(p.t_router, true.t_router), _rel(p.t_enq, true.t_enq))
+
+
+def _cal_warnings(rec):
+    return [w for w in rec if issubclass(w.category, RuntimeWarning)]
+
+
+# --------------------------------------------------------------- harness
+
+
+def test_log_sizes_ascending_dedup_multiple():
+    sizes = log_sizes(1 << 12, 1 << 24, 8, multiple=4 * 8 * 8)
+    assert sizes == sorted(set(sizes))
+    assert all(s % (4 * 8 * 8) == 0 for s in sizes)
+    assert sizes[0] >= 256 and sizes[-1] >= (1 << 24) - 4 * 8 * 8
+    assert len(sizes) == 8
+
+
+def test_log_sizes_edges():
+    assert log_sizes(1024, 4096, 0) == []
+    assert log_sizes(1024, 4096, 1, multiple=4) == [4096]
+    # n larger than distinct rounded values: dedup keeps it ascending
+    tight = log_sizes(64, 128, 10, multiple=64)
+    assert tight == [64, 128]
+
+
+def test_sweep_full_grid_no_faults():
+    sweep = run_sweep(synthetic_measure_fn(REF), [2, 4, 8], config=FAST)
+    assert sweep.dropped == {}
+    assert len(sweep.points) == len(CALIBRATED_TYPES) * 3 * FAST.n_sizes
+    assert sweep.participants == (2, 4, 8)
+    assert all(p.seconds > 0 for p in sweep.points)
+
+
+def test_sweep_accepts_single_participant_count():
+    sweep = run_sweep(synthetic_measure_fn(REF), 8, config=FAST)
+    assert sweep.participants == (8,)
+    assert {p.participants for p in sweep.points} == {8}
+
+
+@pytest.mark.parametrize("mode,cause", [("raise", "error"),
+                                        ("nan", "not-finite"),
+                                        ("tiny", "non-monotone")])
+def test_sweep_fault_degrades_with_one_warning(mode, cause):
+    # fail a mid-sweep call (index 5 lands past the first, smallest size
+    # of the first type, so 'tiny' reads as non-monotone noise)
+    mf = faults.faulty_measure_fn(synthetic_measure_fn(REF),
+                                  fail_at=range(4, 8), mode=mode)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        sweep = run_sweep(mf, 8, config=FAST)
+    assert sweep.dropped.get(cause, 0) >= 1
+    full = len(CALIBRATED_TYPES) * FAST.n_sizes
+    assert 0 < len(sweep.points) < full
+    assert len(_cal_warnings(rec)) == 1          # one per cause, not per point
+    # the partial sweep still fits
+    fit = fit_noc_params(sweep.points, REF)
+    assert not fit.degenerate
+    assert _worst_err(fit, REF) < 0.01
+
+
+def test_sweep_two_causes_two_warnings():
+    inner = synthetic_measure_fn(REF)
+
+    def mf(ct, dv, p):
+        t = inner(ct, dv, p)
+        if ct == "AllGather":
+            raise RuntimeError("boom")
+        if ct == "AllToAll":
+            return float("inf")
+        return t
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        sweep = run_sweep(mf, 8, config=FAST)
+    assert sweep.dropped["error"] == FAST.n_sizes
+    assert sweep.dropped["not-finite"] == FAST.n_sizes
+    assert len(_cal_warnings(rec)) == 2
+
+
+def test_warn_once_reset_hook():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        harness_mod._warn_once(("x",), "first")
+        harness_mod._warn_once(("x",), "suppressed")
+        harness_mod._reset_warned()
+        harness_mod._warn_once(("x",), "again")
+    assert len(rec) == 2
+
+
+# ---------------------------------------------------------------- fitter
+
+
+def test_noise_free_recovery_pow2():
+    sweep = run_sweep(synthetic_measure_fn(REF), [2, 4, 8])
+    fit = fit_noc_params(sweep.points, REF)
+    assert _worst_err(fit, REF) < 1e-9
+    assert fit.max_rel_err < 1e-9
+    assert not fit.identifiable          # split came from the reference
+
+
+def test_noise_free_recovery_non_pow2():
+    true = replace(REF, mesh=(1, 7), t_router=3e-8, t_enq=2e-9)
+    sweep = run_sweep(synthetic_measure_fn(true), [3, 5, 7], config=FAST)
+    fit = fit_noc_params(sweep.points, true)
+    assert _worst_err(fit, true) < 0.01
+
+
+def test_jitter_recovery_within_10pct():
+    sweep = run_sweep(synthetic_measure_fn(REF, jitter=0.03, seed=11),
+                      [2, 4, 8])
+    fit = fit_noc_params(sweep.points, REF)
+    assert _worst_err(fit, REF) < 0.10
+    assert fit.max_rel_err < 0.10
+
+
+def test_degenerate_single_participant():
+    # a (1,1) mesh's sweep only ever sees P=1 — the model predicts zero
+    # and the fitter must return the reference untouched, not invent one
+    pts = [MeasuredPoint("AllReduce", 4096 * i, 1, 1e-6 * i)
+           for i in range(1, 6)]
+    fit = fit_noc_params(pts, REF)
+    assert fit.degenerate
+    assert fit.params == REF
+
+
+def test_degenerate_too_few_points():
+    fit = fit_noc_params([], REF)
+    assert fit.degenerate and fit.params == REF
+    one = [MeasuredPoint("AllReduce", 65536, 8, 1e-4)]
+    assert fit_noc_params(one, REF).degenerate
+
+
+def test_per_type_diagnostics_and_residuals():
+    sweep = run_sweep(synthetic_measure_fn(REF, jitter=0.02, seed=5),
+                      [2, 4, 8])
+    fit = fit_noc_params(sweep.points, REF)
+    assert {t.col_type for t in fit.per_type} == set(CALIBRATED_TYPES)
+    assert len(fit.residuals) == fit.n_points
+    assert all(math.isfinite(r) for r in fit.residuals)
+    assert fit.max_rel_err >= fit.median_rel_err >= 0.0
+    res = relative_errors(fit.points, fit.params)
+    assert max(abs(r) for r in res) == pytest.approx(fit.max_rel_err)
+
+
+if given is not None:
+
+    @settings(max_examples=25, deadline=None)
+    @given(bw=st.floats(min_value=1e9, max_value=1e12),
+           t_router=st.floats(min_value=1e-9, max_value=1e-6),
+           t_enq=st.floats(min_value=1e-10, max_value=1e-7))
+    def test_property_noise_free_recovery(bw, t_router, t_enq):
+        true = replace(REF, channel_bandwidth=bw, t_router=t_router,
+                       t_enq=t_enq)
+        sweep = run_sweep(synthetic_measure_fn(true), [2, 4, 8],
+                          config=FAST)
+        fit = fit_noc_params(sweep.points, true)
+        assert _worst_err(fit, true) < 0.01
+
+    @settings(max_examples=15, deadline=None)
+    @given(jitter=st.floats(min_value=0.0, max_value=0.03),
+           seed=st.integers(min_value=0, max_value=2**16),
+           participants=st.sampled_from([(2, 4, 8), (3, 6), (2, 7, 8)]))
+    def test_property_jittered_recovery(jitter, seed, participants):
+        sweep = run_sweep(
+            synthetic_measure_fn(REF, jitter=jitter, seed=seed),
+            list(participants), config=SweepConfig(n_sizes=6, iters=3,
+                                                   warmup=0))
+        fit = fit_noc_params(sweep.points, REF)
+        assert not fit.degenerate
+        assert _worst_err(fit, REF) < 0.10
+
+
+# ----------------------------------------------------------- persistence
+
+
+def _make_cal(jitter=0.0, **prov):
+    sweep = run_sweep(synthetic_measure_fn(REF, jitter=jitter), [2, 4, 8],
+                      config=FAST)
+    fit = fit_noc_params(sweep.points, REF)
+    kw = dict(backend="synthetic", jax_version="testver", now=lambda: 123.0)
+    kw.update(prov)
+    return calibration_from_fit(fit, **kw)
+
+
+def test_roundtrip_bit_identical(tmp_path):
+    cal = _make_cal()
+    p1 = save_calibration(cal, tmp_path / "a.json")
+    loaded = load_calibration(p1)
+    assert loaded is not None
+    p2 = save_calibration(loaded, tmp_path / "b.json")
+    assert p1.read_bytes() == p2.read_bytes()
+    assert loaded.params == cal.params
+    assert loaded.points == cal.points
+    assert loaded.provenance == cal.provenance
+
+
+def test_stale_provenance_refused(tmp_path):
+    cal = _make_cal()
+    path = save_calibration(cal, tmp_path / "c.json")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = load_calibration(path, expect={"backend": "synthetic",
+                                             "mesh": (1, 8),
+                                             "jax_version": "OTHER"})
+    assert got is None
+    msgs = [str(w.message) for w in _cal_warnings(rec)]
+    assert len(msgs) == 1 and "stale" in msgs[0]
+    assert "repro.calibrate" in msgs[0]    # actionable: names the fix
+    # matching expectations load fine
+    assert load_calibration(path, expect={"backend": "synthetic",
+                                          "mesh": (1, 8),
+                                          "jax_version": "testver"})
+
+
+def test_stale_mesh_refused(tmp_path):
+    path = save_calibration(_make_cal(), tmp_path / "d.json")
+    assert load_calibration(path, expect={"mesh": (4, 4)}) is None
+
+
+def test_corrupt_file_quarantined(tmp_path):
+    path = save_calibration(_make_cal(), tmp_path / "e.json")
+    faults.torn_file(path, keep=0.4)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = load_calibration(path)
+    assert got is None
+    assert not path.exists()                      # moved, not left rotting
+    assert (tmp_path / "corrupt" / "e.json").exists()
+    msgs = [str(w.message) for w in _cal_warnings(rec)]
+    assert len(msgs) == 1 and "quarantined" in msgs[0]
+
+
+def test_nan_residuals_never_persisted(tmp_path):
+    cal = _make_cal()
+    bad = Calibration(params=cal.params, provenance=cal.provenance,
+                      per_type=cal.per_type, points=cal.points,
+                      residuals=cal.residuals + (float("nan"),),
+                      max_rel_err=cal.max_rel_err,
+                      median_rel_err=cal.median_rel_err)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = save_calibration(bad, tmp_path / "f.json")
+    assert out is None
+    assert not (tmp_path / "f.json").exists()
+    assert list(tmp_path.iterdir()) == []         # not even a tmp file
+    assert len(_cal_warnings(rec)) == 1
+
+
+def test_missing_file_is_silent(tmp_path):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert load_calibration(tmp_path / "nope.json") is None
+    assert _cal_warnings(rec) == []
+
+
+# ------------------------------------------------- arch override / model
+
+
+def test_apply_calibration_and_preset_kwarg(tmp_path):
+    path = save_calibration(_make_cal(), tmp_path / "g.json")
+    base = tpu_v5e()
+    cal = load_calibration(path)
+    patched = apply_calibration(base, cal)
+    assert patched.cluster_noc.channel_bandwidth == \
+        cal.params.channel_bandwidth
+    assert patched.cluster_noc.mesh == base.cluster_noc.mesh  # geometry kept
+    assert patched.core_noc == base.core_noc
+    # calibrated machines must fingerprint differently everywhere
+    assert patched.signature() != base.signature()
+    # path / Calibration / NoCParams all accepted; presets thread it
+    assert tpu_v5e(calibrated=str(path)).cluster_noc == patched.cluster_noc
+    assert tpu_v5e(calibrated=cal.params).cluster_noc == patched.cluster_noc
+    with_core = apply_calibration(base, cal, core_noc=True)
+    assert with_core.core_noc.channel_bandwidth == \
+        cal.params.channel_bandwidth
+
+
+def test_apply_calibration_none_is_identity():
+    base = tpu_v5e()
+    assert apply_calibration(base, None) is base
+    assert tpu_v5e(calibrated=None).signature() == base.signature()
+
+
+def test_collective_latency_terms_matches_model():
+    cc, mem_lat, lat = collective_latency_terms("AllReduce", 1 << 20, 8, REF)
+    assert cc.volume_bytes == collective_cost("AllReduce", 1 << 20, 8,
+                                              REF).volume_bytes
+    assert mem_lat == pytest.approx(cc.volume_bytes / REF.channel_bandwidth)
+    assert lat == pytest.approx(mem_lat + noc_latency(cc, REF))
+    assert collective_seconds("AllReduce", 1 << 20, 8, REF) == lat
+
+
+# ----------------------------------------------------- _pearson edge case
+
+
+def test_pearson_degenerate_series_return_zero():
+    assert _pearson([], []) == 0.0
+    assert _pearson([1.0], [1.0]) == 0.0
+    assert _pearson([2.0, 2.0, 2.0], [1.0, 2.0, 3.0]) == 0.0
+    assert _pearson([1.0, 2.0, 3.0], [5.0, 5.0, 5.0]) == 0.0
+
+
+def test_pearson_correlated_series():
+    assert _pearson([1.0, 2.0, 3.0], [2.0, 4.0, 6.0]) == pytest.approx(1.0)
+    assert _pearson([1.0, 2.0, 3.0], [3.0, 2.0, 1.0]) == pytest.approx(-1.0)
+
+
+# ------------------------------------------------------------ driver/CLI
+
+
+def test_calibrate_once_reuse_semantics(tmp_path):
+    kw = dict(backend="synthetic", jax_version="testver",
+              store=str(tmp_path), config=FAST, now=lambda: 99.0)
+    s1 = calibrate_once(synthetic_measure_fn(REF), REF, [2, 4, 8], **kw)
+    assert s1["fits_solved"] == 1 and not s1["reused"]
+    assert s1["persisted"] and s1["gate_ok"]
+    store_file = tmp_path / "calibrated_noc.json"
+    bytes1 = store_file.read_bytes()
+    s2 = calibrate_once(synthetic_measure_fn(REF), REF, [2, 4, 8], **kw)
+    assert s2["reused"] and s2["fits_solved"] == 0
+    assert store_file.read_bytes() == bytes1      # untouched, bit-identical
+    assert [p.name for p in tmp_path.iterdir()] == ["calibrated_noc.json"]
+    # force re-solves
+    s3 = calibrate_once(synthetic_measure_fn(REF), REF, [2, 4, 8],
+                        force=True, **kw)
+    assert s3["fits_solved"] == 1
+
+
+def test_calibrate_once_degenerate_persists_nothing(tmp_path):
+    mf = faults.faulty_measure_fn(synthetic_measure_fn(REF),
+                                  fail_at=range(10_000))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        s = calibrate_once(mf, REF, 8, backend="synthetic",
+                           jax_version="testver", store=str(tmp_path),
+                           config=FAST)
+    assert s["degenerate"] and not s["persisted"] and not s["gate_ok"]
+    assert not (tmp_path / "calibrated_noc.json").exists()
+    assert any("degenerate" in str(w.message) for w in _cal_warnings(rec))
+
+
+def test_cli_end_to_end(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(REPO_ROOT / "src"), env.get("PYTHONPATH")) if p)
+    cmd = [sys.executable, "-m", "repro.calibrate", "--backend=synthetic",
+           "--store", str(tmp_path), "--sizes=4", "--json"]
+    r1 = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                        timeout=300)
+    assert r1.returncode == 0, r1.stderr
+    s1 = json.loads(r1.stdout)
+    assert s1["fits_solved"] == 1 and s1["gate_ok"]
+    store_file = tmp_path / "calibrated_noc.json"
+    bytes1 = store_file.read_bytes()
+    r2 = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                        timeout=300)
+    s2 = json.loads(r2.stdout)
+    assert s2["reused"] and s2["fits_solved"] == 0
+    assert store_file.read_bytes() == bytes1
