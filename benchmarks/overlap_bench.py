@@ -1,0 +1,186 @@
+"""Compute-collective overlap microbenchmark.
+
+Measures the *achieved* hidden fraction when an all-gather and a
+dependency-adjacent GEMM run concurrently, feeding the calibrated
+``overlap`` factor (``calibrate/overlap.py``) and the
+BENCH_search.json v9 gate:
+
+    t_gather  -- jit(shard_map(all_gather)), dispatched and blocked alone
+    t_gemm    -- an independent jit(dot), dispatched and blocked alone
+    t_conc    -- both dispatched back-to-back (jax async dispatch lets
+                 the runtime execute them concurrently), then one block
+
+    hidden fraction = clamp((t_gather + t_gemm - t_conc)
+                            / min(t_gather, t_gemm), 0, 1)
+
+This is exactly the :class:`repro.calibrate.overlap.ConcurrentPoint`
+shape, so the result plugs straight into ``fit_overlap``.  Each timing
+is best-of-``iters`` after a warm-up call (best-of, not mean: dispatch
+jitter only ever *adds* time, so the minimum is the cleanest estimate
+of the schedulable cost).
+
+Backend honesty: the CPU PJRT client *serializes* executions across
+its virtual devices (measured directly: two independent matmuls on
+different virtual devices take exactly the sum of their solo times),
+so off-TPU the achievable hidden fraction is genuinely ~0 — the
+virtual devices share the same cores, and there is no idle engine to
+hide the collective on.  The BENCH_search.json v9 floor gate on the
+measured fraction therefore applies only ``on_tpu``; off-TPU CI gates
+the *model* instead, via the deterministic synthetic-recovery bound
+(``fit_overlap`` on ``synthetic_concurrent_points``).  The Pallas
+double-buffer comparison below has the same caveat: interpret mode
+runs the DMAs eagerly, so its speedup is only a signal on a real TPU.
+
+Also times the Pallas streamed GEMM (``kernels/allgather_gemm.py``)
+with ``buffers=2`` (prefetch chunk i+1 under the chunk-i matmul)
+against the ``buffers=1`` serial baseline.  In interpret mode the
+async copies execute eagerly, so off-TPU the ratio is reported for
+visibility but carries no performance signal.
+
+Run directly (spawns 8 virtual CPU devices when no TPU is attached):
+
+    PYTHONPATH=src python benchmarks/overlap_bench.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, Optional
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _best_of(fn, iters: int, clock: Callable[[], float]) -> float:
+    """Best-of-``iters`` wall seconds of ``fn()`` after one warm-up."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = clock()
+        jax.block_until_ready(fn())
+        best = min(best, clock() - t0)
+    return best
+
+
+def measure_hidden_fraction(*, M: int = 256, K: int = 4096, N: int = 512,
+                            iters: int = 20,
+                            clock: Callable[[], float] = time.perf_counter,
+                            ) -> Dict:
+    """Measured hidden fraction of gather-under-GEMM on this backend."""
+    devices = jax.devices()
+    n_dev = len(devices)
+    mesh = Mesh(np.array(devices), ("x",))
+    rng = np.random.default_rng(0)
+    if K % n_dev != 0:
+        K = (K // n_dev + 1) * n_dev
+    X = jax.device_put(
+        jnp.asarray(rng.standard_normal((M, K)), jnp.float32),
+        NamedSharding(mesh, P(None, "x")))
+    A = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    W = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+
+    gather = jax.jit(shard_map(
+        lambda x: jax.lax.all_gather(x, "x", axis=1, tiled=True),
+        mesh=mesh, in_specs=P(None, "x"), out_specs=P(None, None),
+        check_rep=False))
+    # the compute half lives on the default device, off the mesh, so the
+    # runtime is free to execute it while the gather is in flight
+    gemm = jax.jit(lambda a, w: jnp.dot(a, w))
+
+    t_gather = _best_of(lambda: gather(X), iters, clock)
+    t_gemm = _best_of(lambda: gemm(A, W), iters, clock)
+    # jax dispatch is async: both programs are in flight before the
+    # single block — the measured analogue of overlap=achievable
+    t_conc = _best_of(lambda: (gather(X), gemm(A, W)), iters, clock)
+
+    cap = min(t_gather, t_gemm)
+    hidden = t_gather + t_gemm - t_conc
+    frac = float(np.clip(hidden / cap, 0.0, 1.0)) if cap > 0 else 0.0
+    return {"t_gather_s": t_gather, "t_gemm_s": t_gemm,
+            "t_concurrent_s": t_conc, "hidden_fraction": frac,
+            "n_devices": n_dev, "backend": jax.default_backend(),
+            "shape": [M, K, N]}
+
+
+def measure_double_buffer(*, M: int = 128, K: int = 1024, N: int = 256,
+                          chunks: int = 8, iters: int = 5,
+                          clock: Callable[[], float] = time.perf_counter,
+                          ) -> Dict:
+    """Pallas streamed GEMM: double- vs single-buffered chunk stream.
+    Only a performance signal on a real TPU (interpret mode runs the
+    DMAs eagerly); always a correctness check."""
+    from repro.kernels import streamed_gemm
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    out2 = streamed_gemm(x, w, chunks=chunks, buffers=2)
+    out1 = streamed_gemm(x, w, chunks=chunks, buffers=1)
+    err = float(jnp.abs(out2 - out1).max())
+    t2 = _best_of(lambda: streamed_gemm(x, w, chunks=chunks, buffers=2),
+                  iters, clock)
+    t1 = _best_of(lambda: streamed_gemm(x, w, chunks=chunks, buffers=1),
+                  iters, clock)
+    on_tpu = jax.default_backend() == "tpu"
+    return {"t_double_buffer_s": t2, "t_single_buffer_s": t1,
+            "buffer_agreement_err": err, "on_tpu": on_tpu,
+            "speedup": (t1 / t2) if t2 > 0 else 0.0}
+
+
+def synthetic_recovery(true_overlap: float = 0.6) -> Dict:
+    """Deterministic model-side check: ``fit_overlap`` must recover a
+    known achievable overlap from a synthetic concurrent sweep — the
+    off-TPU stand-in for the measured-fraction gate (see module
+    docstring)."""
+    from repro.calibrate.overlap import (fit_overlap,
+                                         synthetic_concurrent_points)
+    from repro.core.hardware import tpu_v5e
+
+    noc = tpu_v5e().cluster_noc
+    clean = fit_overlap(synthetic_concurrent_points(noc, true_overlap), noc)
+    jit_f = fit_overlap(
+        synthetic_concurrent_points(noc, true_overlap, jitter=0.05, seed=3),
+        noc)
+    return {"true_overlap": true_overlap,
+            "clean_fitted": clean.overlap,
+            "clean_err": abs(clean.overlap - true_overlap),
+            "clean_pred_max_err": clean.max_abs_err,
+            "jittered_fitted": jit_f.overlap,
+            "jittered_err": abs(jit_f.overlap - true_overlap)}
+
+
+def run_all(*, iters: int = 20,
+            clock: Callable[[], float] = time.perf_counter) -> Dict:
+    out = {"schema": "comet/overlap_bench/v1"}
+    out["fused_gather_gemm"] = measure_hidden_fraction(iters=iters,
+                                                       clock=clock)
+    out["pallas_double_buffer"] = measure_double_buffer(clock=clock)
+    out["synthetic_recovery"] = synthetic_recovery()
+    f = out["fused_gather_gemm"]
+    print(f"gather={f['t_gather_s'] * 1e6:.0f}us gemm={f['t_gemm_s'] * 1e6:.0f}us "
+          f"concurrent={f['t_concurrent_s'] * 1e6:.0f}us "
+          f"hidden_fraction={f['hidden_fraction']:.3f} "
+          f"({f['n_devices']} {f['backend']} devices)")
+    d = out["pallas_double_buffer"]
+    print(f"pallas 2buf={d['t_double_buffer_s'] * 1e6:.0f}us "
+          f"1buf={d['t_single_buffer_s'] * 1e6:.0f}us "
+          f"speedup={d['speedup']:.2f} on_tpu={d['on_tpu']} "
+          f"agreement_err={d['buffer_agreement_err']:.1e}")
+    s = out["synthetic_recovery"]
+    print(f"synthetic recovery: true={s['true_overlap']:.2f} "
+          f"clean={s['clean_fitted']:.4f} jittered={s['jittered_fitted']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    res = run_all()
+    if "--json" in sys.argv:
+        print(json.dumps(res))

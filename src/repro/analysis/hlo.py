@@ -194,7 +194,8 @@ HW = {
 
 def roofline_terms(flops_per_device: float, bytes_per_device: float,
                    wire_bytes_per_device: float,
-                   link_bw: float = None) -> Dict[str, float]:
+                   link_bw: float = None,
+                   overlap: float = 1.0) -> Dict[str, float]:
     """Three roofline terms in seconds (per-device quantities; the SPMD
     module is per-device, so chips cancel out of the brief's formulas).
 
@@ -203,6 +204,13 @@ def roofline_terms(flops_per_device: float, bytes_per_device: float,
     ``repro.calibrate`` calibration here, so the collective term of the
     roofline is charged at the bandwidth the harness actually observed
     instead of the datasheet constant.
+
+    ``overlap`` in [0, 1] is the achievable compute-collective overlap
+    (the same factor ``core/cost.py`` charges): the ``*_serial_s`` /
+    ``*_overlap_s`` pair reports the collective term fully exposed
+    (overlap=0) vs. hidden up to ``overlap`` behind the on-chip bound.
+    The legacy ``bottleneck`` / ``bound_s`` keys keep their original
+    max-of-three semantics (everything perfectly concurrent).
     """
     t_compute = flops_per_device / HW["peak_flops_bf16"]
     t_memory = bytes_per_device / HW["hbm_bw"]
@@ -212,6 +220,11 @@ def roofline_terms(flops_per_device: float, bytes_per_device: float,
         (("compute", t_compute), ("memory", t_memory),
          ("collective", t_collective)), key=lambda kv: kv[1])[0]
     total = max(t_compute, t_memory, t_collective)
+    on_chip = max(t_compute, t_memory)
+    t_col_exposed = (1.0 - overlap) * t_collective
+    dominant_ov = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_col_exposed)), key=lambda kv: kv[1])[0]
     return {
         "t_compute_s": t_compute,
         "t_memory_s": t_memory,
@@ -219,4 +232,12 @@ def roofline_terms(flops_per_device: float, bytes_per_device: float,
         "bottleneck": dominant,
         "bound_s": total,
         "compute_fraction": t_compute / total if total > 0 else 0.0,
+        # serial charging: every collective fully exposed behind the
+        # on-chip bound (the pre-overlap cost model's assumption)
+        "bound_serial_s": on_chip + t_collective,
+        # overlap-adjusted: only the non-hidden share stays exposed
+        "overlap": overlap,
+        "t_collective_exposed_s": t_col_exposed,
+        "bound_overlap_s": on_chip + t_col_exposed,
+        "bottleneck_overlap": dominant_ov,
     }

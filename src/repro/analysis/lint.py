@@ -70,14 +70,16 @@ POLY_FILES = (
 # Scalar-only helpers inside poly files where math.* is legitimate.
 MATH_ALLOWED_FUNCS: Dict[str, Set[str]] = {
     "core/collectives.py": {"_step_distances", "_scalar_factors",
-                            "_factor_table", "_mesh_avg_distance"},
+                            "_factor_table", "_mesh_avg_distance",
+                            "overlapped_collective_seconds"},
 }
 
 # Functions that are documented scalar-only paths (validated entry points,
 # table builders): array-truthiness rules do not apply inside them.
 SCALAR_ONLY_FUNCS: Dict[str, Set[str]] = {
     "core/collectives.py": {"_step_distances", "_scalar_factors",
-                            "_factor_table", "_mesh_avg_distance"},
+                            "_factor_table", "_mesh_avg_distance",
+                            "overlapped_collective_seconds"},
     "core/validate.py": {"validate_headroom_levels", "validate_tree"},
 }
 
@@ -430,6 +432,7 @@ def _kernel_vmem_cases() -> Dict[str, Tuple[List[Dict[str, int]], str]]:
     """Per kernel file: the candidate-variable environments the autotuner
     can emit for the paper shapes (the feasible sets its VMEM filters
     produce), plus a label for reports."""
+    from repro.kernels.allgather_gemm import BUDGET_SHAPES
     from repro.kernels.autotune import (PAPER_KERNEL_SHAPES,
                                         _attention_pairs, _gemm_pairs,
                                         _ssd_chunk_cands)
@@ -443,11 +446,18 @@ def _kernel_vmem_cases() -> Dict[str, Tuple[List[Dict[str, int]], str]]:
     for s, p, n in PAPER_KERNEL_SHAPES["ssd_chunk_len"]:
         for c in _ssd_chunk_cands(s, p, n):
             ssd_envs.append({"chunk": c, "P": p, "N": n})
+    # the streamed all-gather-GEMM declares its double buffers explicitly
+    # (a ``buffers`` axis on the scratch shapes), so the envs cross both
+    # buffer counts; the rule's global x2 stays as conservative headroom
+    agg_envs = [{"buffers": b, "M": m, "kc": k // c, "N": n}
+                for m, k, n, c in BUDGET_SHAPES for b in (1, 2)]
     return {
         "kernels/gemm_softmax.py": (gemm_envs, "gemm paper shapes"),
         "kernels/gemm_layernorm.py": (gemm_envs, "gemm paper shapes"),
         "kernels/flash_attention.py": (attn_envs, "attention paper shapes"),
         "kernels/ssd.py": (ssd_envs, "ssd paper shapes"),
+        "kernels/allgather_gemm.py": (agg_envs,
+                                      "all-gather-GEMM stream shapes"),
     }
 
 

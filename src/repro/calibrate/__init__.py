@@ -7,6 +7,8 @@ store, and feed it back into every ``Arch`` preset via ``calibrated=``.
 
     harness  -- run_sweep / jax_measure_fn / synthetic_measure_fn
     fitter   -- fit_noc_params: weighted NNLS on the Eq. 1/3/4 model
+    overlap  -- fit_overlap: achievable compute-collective overlap from
+                concurrent compute+collective sweeps
     persist  -- calibrated_noc.json: save / load / staleness / quarantine
     driver   -- calibrate_once: reuse-or-sweep -> fit -> gate -> persist
     __main__ -- ``python -m repro.calibrate`` CLI
@@ -19,6 +21,9 @@ from .fitter import FitResult, TypeFit, fit_noc_params, predicted_seconds, \
 from .harness import (CALIBRATED_TYPES, MeasuredPoint, SweepConfig,
                       SweepResult, jax_measure_fn, log_sizes, run_sweep,
                       synthetic_measure_fn)
+from .overlap import (ConcurrentPoint, OverlapFit, fit_overlap,
+                      measured_hidden_fraction, predicted_concurrent_seconds,
+                      synthetic_concurrent_points)
 from .persist import (CALIB_FILENAME, CALIBRATION_SCHEMA, Calibration,
                       calibration_from_fit, calibration_path,
                       load_calibration, save_calibration)
@@ -28,6 +33,9 @@ __all__ = [
     "run_sweep", "log_sizes", "jax_measure_fn", "synthetic_measure_fn",
     "FitResult", "TypeFit", "fit_noc_params", "predicted_seconds",
     "relative_errors",
+    "ConcurrentPoint", "OverlapFit", "fit_overlap",
+    "measured_hidden_fraction", "predicted_concurrent_seconds",
+    "synthetic_concurrent_points",
     "CALIBRATION_SCHEMA", "CALIB_FILENAME", "Calibration",
     "calibration_path", "save_calibration", "load_calibration",
     "calibration_from_fit",

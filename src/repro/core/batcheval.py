@@ -121,13 +121,14 @@ class Topology:
 
     def spec(self, m_tiles: int = 1, k_tiles: int = 1, n_tiles: int = 1,
              sp_cluster: int = 0, sp_core: int = 0,
-             schedule: Optional[str] = None) -> MappingSpec:
+             schedule: Optional[str] = None,
+             overlap: float = 0.0) -> MappingSpec:
         return MappingSpec(
             variant=self.variant, m_tiles=m_tiles, k_tiles=k_tiles,
             n_tiles=n_tiles, sp_cluster=sp_cluster, sp_core=sp_core,
             schedule=self.schedule if schedule is None else schedule,
             collective_gran=self.collective_gran,
-            loop_order_gb=self.loop_order_gb)
+            loop_order_gb=self.loop_order_gb, overlap=overlap)
 
 
 @dataclass
@@ -141,6 +142,7 @@ class BatchResult:
     sp_cluster: np.ndarray
     sp_core: np.ndarray
     schedule: np.ndarray            # per-point schedule names (str array)
+    overlap: np.ndarray             # per-point compute–collective overlap
     latency: np.ndarray
     energy_pj: np.ndarray
     valid: np.ndarray
@@ -217,7 +219,7 @@ class BatchResult:
         return self.topo.spec(
             int(self.m_tiles[i]), int(self.k_tiles[i]), int(self.n_tiles[i]),
             sp_cluster=int(self.sp_cluster[i]), sp_core=int(self.sp_core[i]),
-            schedule=str(self.schedule[i]))
+            schedule=str(self.schedule[i]), overlap=float(self.overlap[i]))
 
     def _breakdown_at(self, bd: Dict[str, np.ndarray], i: int) -> Dict[str, float]:
         return {k: float(np.broadcast_to(np.asarray(v, dtype=np.float64),
@@ -399,7 +401,8 @@ class ParetoArchive:
 # Dict-valued channels (headroom_levels / breakdowns) are flattened to
 # dotted keys ("hl.GB", "lb.gemm", "eb.dram", ...).
 _SHM_FIELDS = ("m_tiles", "k_tiles", "n_tiles", "sp_cluster", "sp_core",
-               "schedule", "latency", "energy_pj", "valid", "headroom")
+               "schedule", "overlap", "latency", "energy_pj", "valid",
+               "headroom")
 _SHM_ALIGN = 64      # cache-line alignment for each array's offset
 
 
@@ -515,7 +518,7 @@ def batch_from_shm(ref: ShmBatchRef):
     br = BatchResult(
         ref.topo, arrs["m_tiles"], arrs["k_tiles"], arrs["n_tiles"],
         arrs["sp_cluster"], arrs["sp_core"], arrs["schedule"],
-        arrs["latency"], arrs["energy_pj"], arrs["valid"],
+        arrs["overlap"], arrs["latency"], arrs["energy_pj"], arrs["valid"],
         headroom=arrs.get("headroom"),
         headroom_levels=_shm_group(arrs, "hl"),
         lat_breakdown=_shm_group(arrs, "lb"),
@@ -609,15 +612,20 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
                          n_tiles: Sequence[int],
                          sp_cluster: Optional[Sequence[int]] = None,
                          sp_core: Optional[Sequence[int]] = None,
-                         schedule: Optional[Sequence[str]] = None, *,
+                         schedule: Optional[Sequence[str]] = None,
+                         overlap: Optional[Sequence[float]] = None, *,
                          track_breakdown: bool = False) -> BatchResult:
     """Evaluate parallel arrays of (m, k, n[, sp_cluster, sp_core,
-    schedule]) grid points for one topology in a single vectorized pass.
+    schedule, overlap]) grid points for one topology in a single
+    vectorized pass.
 
     ``sp_cluster``/``sp_core`` default to 0 (= full architecture fanout);
     ``schedule`` is a parallel array of schedule *names* defaulting to the
-    topology's pinned schedule.  With ``track_breakdown=True`` the result
-    carries per-key latency/energy breakdown arrays.
+    topology's pinned schedule; ``overlap`` is a parallel array of
+    compute–collective overlap factors in [0, 1] defaulting to the scalar
+    0.0 (the pre-overlap serial charging, bit-identical by construction).
+    With ``track_breakdown=True`` the result carries per-key
+    latency/energy breakdown arrays.
     """
     m = np.asarray(m_tiles, dtype=np.int64)
     k = np.asarray(k_tiles, dtype=np.int64)
@@ -626,6 +634,12 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
            if sp_cluster is not None else np.asarray(0, dtype=np.int64))
     spo = (np.asarray(sp_core, dtype=np.int64)
            if sp_core is not None else np.asarray(0, dtype=np.int64))
+    ov = (np.asarray(overlap, dtype=np.float64)
+          if overlap is not None else np.asarray(0.0))
+    if overlap is not None and ov.size:
+        if float(ov.min()) < 0.0 or float(ov.max()) > 1.0:
+            # mirror the scalar range contract of MappingSpec.overlap
+            raise ValueError("overlap must lie in [0, 1]")
     if schedule is not None:
         sched_names = np.asarray(schedule)
         bad = set(np.unique(sched_names).tolist()) - set(SCHEDULES)
@@ -634,20 +648,25 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
             # at TileNode construction
             raise ValueError(f"bad schedule {sorted(bad)}")
         sched_mask = sched_names != "sequential"
-        m, k, n, spc, spo, sched_mask = np.broadcast_arrays(
-            m, k, n, spc, spo, sched_mask)
+        m, k, n, spc, spo, sched_mask, ov = np.broadcast_arrays(
+            m, k, n, spc, spo, sched_mask, ov)
         sched_names = np.broadcast_to(sched_names, m.shape)
         spec_schedule = sched_mask
     else:
-        m, k, n, spc, spo = np.broadcast_arrays(m, k, n, spc, spo)
+        m, k, n, spc, spo, ov = np.broadcast_arrays(m, k, n, spc, spo, ov)
         sched_names = np.broadcast_to(np.asarray(topo.schedule), m.shape)
         spec_schedule = topo.schedule
     shape = m.shape
+    # ``overlap=None`` keeps the scalar 0.0 in the spec so the cost model
+    # takes its pre-overlap short-circuit; the BatchResult still records
+    # the per-point zeros for spec reconstruction.
+    spec_overlap = ov if overlap is not None else 0.0
+    ov_names = np.broadcast_to(np.asarray(ov, dtype=np.float64), shape)
     spec = MappingSpec(
         variant=topo.variant, m_tiles=m, k_tiles=k, n_tiles=n,
         sp_cluster=spc, sp_core=spo, schedule=spec_schedule,
         collective_gran=topo.collective_gran,
-        loop_order_gb=topo.loop_order_gb)
+        loop_order_gb=topo.loop_order_gb, overlap=spec_overlap)
     try:
         root, tiling = build_tree(co, arch, spec)
     except (ValueError, KeyError):
@@ -658,7 +677,7 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
         # entry would silently corrupt every other key plus the
         # latency/energy fields.
         return BatchResult(
-            topo, m, k, n, spc, spo, sched_names,
+            topo, m, k, n, spc, spo, sched_names, ov_names,
             np.zeros(shape), np.zeros(shape), np.zeros(shape, dtype=bool),
             headroom=np.zeros(shape),
             lat_breakdown={k_: np.zeros(shape) for k_ in LAT_KEYS}
@@ -684,30 +703,35 @@ def evaluate_specs_batch(co: CompoundOp, arch: Arch, topo: Topology,
         np.broadcast_to(np.asarray(cost.energy_pj, dtype=np.float64), shape))
     lat_bd = dict(cost.lat_breakdown) if track_breakdown else None
     en_bd = dict(cost.energy_breakdown) if track_breakdown else None
-    return BatchResult(topo, m, k, n, spc, spo, sched_names,
+    return BatchResult(topo, m, k, n, spc, spo, sched_names, ov_names,
                        latency, energy, valid, headroom=headroom,
                        headroom_levels=headroom_levels,
                        lat_breakdown=lat_bd, energy_breakdown=en_bd)
 
 
 def _grid_arrays(co: CompoundOp, cands: Dict[str, List]) -> Tuple[np.ndarray, ...]:
-    """Flattened meshgrid over the numeric axes + the schedule axis:
-    (m, k, n, sp_cluster, sp_core, schedule-names) parallel arrays."""
+    """Flattened meshgrid over the numeric axes + the schedule and overlap
+    axes: (m, k, n, sp_cluster, sp_core, schedule-names, overlap) parallel
+    arrays."""
     axes = numeric_axes(co)
     per_axis = [np.asarray(cands[ax], dtype=np.int64) if ax in axes
                 else np.asarray([0 if ax.startswith("sp_") else 1],
                                 dtype=np.int64)
                 for ax in NUMERIC_AXES]
     per_axis.append(np.asarray(cands["schedule"]))
+    per_axis.append(np.asarray(cands.get("overlap", [0.0]),
+                               dtype=np.float64))
     mg = np.meshgrid(*per_axis, indexing="ij")
     return tuple(g.reshape(-1) for g in mg)
 
 
 def grid_size(co: CompoundOp, cands: Dict[str, List]) -> int:
     """Number of grid points per topology for this compound op (numeric
-    axes x the schedule axis).  Missing axes count as pinned (PR 1-shaped
-    candidate dicts without sp_*/schedule keys remain accepted)."""
+    axes x the schedule x overlap axes).  Missing axes count as pinned
+    (PR 1-shaped candidate dicts without sp_*/schedule/overlap keys remain
+    accepted)."""
     n = len(cands.get("schedule", ("sequential",)))
+    n *= len(cands.get("overlap", (0.0,)))
     for ax in numeric_axes(co):
         n *= len(cands.get(ax, (0,)))
     return n
@@ -779,16 +803,21 @@ def evaluate_topology_grid(co: CompoundOp, arch: Arch, topo: Topology,
     full.setdefault("sp_cluster", [0])
     full.setdefault("sp_core", [0])
     full.setdefault("schedule", [topo.schedule])
+    full.setdefault("overlap", [0.0])
     key = (co_signature(co), arch.signature(), topo,
            tuple(full["m_tiles"]), tuple(full["k_tiles"]),
            tuple(full["n_tiles"]),
            tuple(full["sp_cluster"]), tuple(full["sp_core"]),
-           tuple(full["schedule"]))
+           tuple(full["schedule"]), tuple(full["overlap"]))
     hit = _GRID_CACHE.get(key)
     if hit is not None:
         return hit
-    m, k, n, spc, spo, sched = _grid_arrays(co, full)
-    br = evaluate_specs_batch(co, arch, topo, m, k, n, spc, spo, sched)
+    m, k, n, spc, spo, sched, ov = _grid_arrays(co, full)
+    # a pure-serial grid ([0.0] overlap axis) passes overlap=None so the
+    # cost model takes the bit-identical pre-overlap path
+    ov_arg = None if tuple(full["overlap"]) == (0.0,) else ov  # scalar-ok: host-side axis tuple
+    br = evaluate_specs_batch(co, arch, topo, m, k, n, spc, spo, sched,
+                              ov_arg)
     _GRID_CACHE.put(key, br)
     return br
 

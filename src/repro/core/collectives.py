@@ -56,6 +56,8 @@ __all__ = [
     "collective_cost",
     "collective_latency_terms",
     "collective_seconds",
+    "collective_overlap_terms",
+    "overlapped_collective_seconds",
     "noc_latency",
     "collective_cache_clear",
     "COLLECTIVE_TYPES",
@@ -297,6 +299,50 @@ def collective_seconds(
     :func:`collective_latency_terms`)."""
     return collective_latency_terms(col_type, data_volume, participants,
                                     noc)[2]
+
+
+def collective_overlap_terms(
+    col_type: str,
+    data_volume: float,
+    participants: int,
+    noc: NoCParams,
+) -> Tuple[float, float]:
+    """Per-collective-type ``(hideable, exposed)`` decomposition, seconds.
+
+    ``hideable`` is the Eq. 1 MemLat term — the channel-bandwidth transfer
+    time a double-buffered fused kernel can run concurrently with compute
+    (gather chunk *i+1* in flight while chunk *i* is consumed).  ``exposed``
+    is the Eq. 3 NoCLat enqueue/router term that stays serial no matter the
+    schedule: every chunk still pays its injection and routing cost.  The
+    cost model's overlap factor scales only the hideable term, and the
+    calibration fitter (``repro.calibrate.overlap``) expresses measured
+    concurrent sweeps in exactly this split, so a fitted *achievable*
+    overlap plugs into the model without unit conversion.
+    """
+    cc, mem_lat, total = collective_latency_terms(
+        col_type, data_volume, participants, noc)
+    return mem_lat, total - mem_lat
+
+
+def overlapped_collective_seconds(
+    col_type: str,
+    data_volume: float,
+    participants: int,
+    noc: NoCParams,
+    *,
+    overlap: float = 0.0,
+    compute_seconds: float = math.inf,
+) -> float:
+    """Eq. 4 seconds for one collective with ``overlap`` of its hideable
+    time hidden under ``compute_seconds`` of dependency-adjacent compute
+    (the scalar analog of the ``TileNode.overlap`` window adjustment in
+    :meth:`repro.core.cost.CostModel.tile_cost`).  ``overlap=0`` is exactly
+    :func:`collective_seconds`; the result never drops below the exposed
+    enqueue term."""
+    hideable, exposed = collective_overlap_terms(
+        col_type, data_volume, participants, noc)
+    hidden = overlap * min(hideable, compute_seconds)
+    return hideable + exposed - hidden
 
 
 def noc_latency(cost: CollectiveCost, noc: NoCParams) -> float:

@@ -37,7 +37,7 @@ from typing import Dict, Tuple
 from .collectives import collective_latency_terms
 from .hardware import Arch
 from .mapping import CollectiveNode, ComputeNode, Node, TileNode, Tiling
-from .numerics import ceil_div, is_array, reduce_max, vmax, vwhere
+from .numerics import ceil_div, is_array, reduce_max, vmax, vmin, vwhere
 from .workload import TensorSpec
 
 __all__ = ["NodeCost", "CostModel", "systolic_gemm_cycles"]
@@ -193,6 +193,31 @@ class CostModel:
         # pipelined) — the mask folds the schedule axis into one SoA pass.
         sched = node.schedule
         sched_is_mask = is_array(sched)
+        # Overlap extension to Eqs. 5–7: ``node.overlap`` in [0, 1] hides
+        # that fraction of the window's *hideable* collective time (the
+        # Eq. 1 mem_lat of CollectiveNode children; the Eq. 3 enqueue /
+        # router term stays exposed) under sibling compute.  The hidden
+        # time is capped by the compute time available to hide under, so
+        # the window never drops below compute + exposed collective cost.
+        # ``overlap`` may be an array (a grid axis, like the schedule
+        # mask).  The guard keeps overlap == 0.0 bit-identical to the
+        # pre-overlap serial charging: the code path is literally the old
+        # one when overlap is the scalar 0.0, and ``x - 0.0 * y`` for the
+        # array path.
+        ov = node.overlap
+        ov_on = is_array(ov) or ov != 0.0  # scalar-ok: scalar 0.0 short-circuit
+        if ov_on:
+            col_hideable = sum(
+                cc.mem_lat * fr
+                for cc, ch, fr in zip(child_costs, node.children, fracs)
+                if isinstance(ch, CollectiveNode))
+            comp_lat = sum(
+                cc.latency * fr
+                for cc, ch, fr in zip(child_costs, node.children, fracs)
+                if not isinstance(ch, CollectiveNode))
+            hidden = ov * vmin(col_hideable, comp_lat)
+        else:
+            hidden = 0.0
         if not child_costs:
             mw = 0.0
         elif len(child_costs) == 1:
@@ -200,16 +225,29 @@ class CostModel:
             mw = child_costs[0].latency * fracs[0]
         elif not sched_is_mask and sched == "sequential":
             mw = sum(cc.latency * fr for cc, fr in zip(child_costs, fracs))
+            if ov_on:
+                mw = mw - hidden
+                if self.track_breakdown:
+                    c.lat_breakdown["collective"] -= hidden * n_iter
         else:
             mx = reduce_max(cc.latency * fr for cc, fr in zip(child_costs, fracs))
             conflict = (sum(cc.mem_lat * fr for cc, fr in zip(child_costs, fracs))
                         - mx)                                       # Eq. 7
+            if ov_on:
+                # hidden collective traffic no longer contends for the
+                # pipeline window (Eq. 7's conflict time shrinks)
+                conflict = conflict - hidden
             stall = vmax(0.0, conflict)                             # Eq. 6
             pipe = mx + stall
             if sched_is_mask:
                 seq = sum(cc.latency * fr for cc, fr in zip(child_costs, fracs))
+                if ov_on:
+                    seq = seq - hidden
                 mw = vwhere(sched, pipe, seq)
                 stall = vwhere(sched, stall, 0.0)
+                if self.track_breakdown and ov_on:
+                    c.lat_breakdown["collective"] -= \
+                        vwhere(sched, 0.0, hidden) * n_iter
             else:
                 mw = pipe
             if self.track_breakdown:

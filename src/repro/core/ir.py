@@ -61,6 +61,11 @@ class MappingSpec:
     schedule: str = "sequential"
     collective_gran: str = "tile"   # 'tile' (paper-faithful) | 'stats'
     collective_level: str = "GB"    # where CO nodes sit
+    # Compute–collective overlap factor in [0, 1]: the fraction of each
+    # window's hideable collective time (its Eq. 1 mem_lat; the Eq. 3
+    # enqueue/router term stays exposed) hidden under sibling compute.
+    # 0.0 (default) reproduces the pre-overlap serial charging exactly.
+    overlap: float = 0.0
 
 
 @dataclass
@@ -220,7 +225,8 @@ def _build_gemm_epilogue(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple
             input_tensors=gemm_only_inputs + epi_ext_inputs,
             output_tensors=(final,),
             bypass_tensors=tuple(co.intermediates()),
-            children=children, schedule=spec.schedule, label="T_fused_dist")]
+            children=children, schedule=spec.schedule, label="T_fused_dist",
+            overlap=spec.overlap)]
 
     elif spec.variant == "fused_std":
         # Fused-GEMM-SM: GEMM distributed; Gather C rows to one cluster;
@@ -244,7 +250,8 @@ def _build_gemm_epilogue(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple
             bypass_tensors=tuple(co.intermediates()),
             children=[gemm_ob, gather, epi_ob],
             schedule=spec.schedule, label="T_fused_std",
-            extra_resident_bytes=m_tile * N * dtype_b * 2.0)
+            extra_resident_bytes=m_tile * N * dtype_b * 2.0,
+            overlap=spec.overlap)
         root_children = [gb]
 
     elif spec.variant == "fused_epilogue":
@@ -277,7 +284,8 @@ def _build_gemm_epilogue(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple
             spatial_loops=[Loop("N", n_cl, True)],
             input_tensors=(inter,) + epi_ext_inputs, output_tensors=(final,),
             bypass_tensors=epi_bypass,
-            children=children, schedule=spec.schedule, label="T_epi_gb")
+            children=children, schedule=spec.schedule, label="T_epi_gb",
+            overlap=spec.overlap)
         root_children = [gb_gemm, gb_epi]
 
     elif spec.variant == "unfused":
@@ -404,7 +412,8 @@ def _build_attention(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[Til
             input_tensors=("Q", "Kt", "V"),
             output_tensors=(co.external_outputs[0],),
             bypass_tensors=tuple(co.intermediates()),
-            children=children, schedule=spec.schedule, label="T_fa_gb")
+            children=children, schedule=spec.schedule, label="T_fa_gb",
+            overlap=spec.overlap)
         root_children: List[Node] = [gb]
 
     elif spec.variant in ("pfa", "ua"):
@@ -418,7 +427,7 @@ def _build_attention(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[Til
                 input_tensors=tuple(inputs), output_tensors=tuple(outputs),
                 bypass_tensors=tuple(bypass),
                 children=children, schedule=spec.schedule, label=label,
-                extra_resident_bytes=extra)
+                extra_resident_bytes=extra, overlap=spec.overlap)
 
         score_ob = ob_node([_gemm_node(score, leaf)], ("Q", "Kt"), ("S",),
                            label="T_score_ob")
@@ -524,13 +533,12 @@ def _build_generic(co: CompoundOp, arch: Arch, spec: MappingSpec) -> Tuple[TileN
                 src=("GB",), dest=("GB",), participants=p_cl,
                 data_volume_bytes=out_b / vmax(1, m_tiles), count=1,
                 noc_level="GB", label=f"CO_{op.name}"))
-    if fused:
-        # single fused GB region: merge into one GB node sequence
-        root = TileNode(level="DRAM", index=0, children=children,
-                        schedule="sequential", label="T_root")
-    else:
-        root = TileNode(level="DRAM", index=0, children=children,
-                        schedule="sequential", label="T_root")
+    # the generic builder's collectives sit at the DRAM root, so the
+    # overlap factor applies there (fused or not, the tree shape is the
+    # same; fused only changes bypass staging)
+    root = TileNode(level="DRAM", index=0, children=children,
+                    schedule="sequential", label="T_root",
+                    overlap=spec.overlap)
     return root, tiling
 
 

@@ -219,6 +219,11 @@ class TileNode:
     # gathered full-row tensor in the standard-SM mapping) — validation only.
     extra_resident_bytes: float = 0.0
     exec_fraction: float = 1.0
+    # Compute–collective overlap factor in [0, 1] for this node's window:
+    # the fraction of its collective children's hideable time (Eq. 1
+    # mem_lat) hidden under sibling compute.  May be an array on the
+    # batched path (an overlap grid axis, like the ``schedule`` mask).
+    overlap: float = 0.0
 
     def __post_init__(self) -> None:
         # Batched evaluation passes a boolean mask array (True = pipelined)

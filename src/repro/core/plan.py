@@ -74,7 +74,8 @@ __all__ = ["ENGINE_VERSION", "MappingPlan", "PlanCache", "get_plan_cache",
 # plan embodies.  Bump on any change that can alter a chosen mapping or
 # its predicted numbers: every persisted plan whose version mismatches is
 # ignored and re-solved.
-ENGINE_VERSION = 5
+# v6: MappingSpec/plans carry the compute–collective ``overlap`` axis.
+ENGINE_VERSION = 6
 
 DEFAULT_CACHE_DIR = "~/.cache/repro-plans"
 _ENV_VAR = "REPRO_PLAN_CACHE"

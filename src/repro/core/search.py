@@ -103,7 +103,7 @@ from .workload import CompoundOp
 __all__ = ["SearchResult", "search", "search_many", "parallel_map",
            "candidate_specs", "pow2_tilings", "divisors",
            "fanout_candidates", "cleanup_shm_segments",
-           "EXHAUSTIVE_LIMIT", "PROCESS_MIN_JOBS"]
+           "EXHAUSTIVE_LIMIT", "PROCESS_MIN_JOBS", "OVERLAP_CANDIDATES"]
 
 # Exhaustive enumeration cap: above this many grid points per search the
 # randomized fallback kicks in.  The paper-space grids are ~1e3-3e4
@@ -111,6 +111,16 @@ __all__ = ["SearchResult", "search", "search_many", "parallel_map",
 # the largest is the non-pow2 provisioning GEMM on cloud at ~117k points
 # — stay exhaustive.
 EXHAUSTIVE_LIMIT = 131072
+
+# Default compute–collective overlap candidate axis for overlap-searched
+# runs (``search(..., overlap=OVERLAP_CANDIDATES)``).  0.0 keeps the
+# serial point in the space (so the overlap-searched best can never lose
+# to the serial best); 1.0 is the full double-buffered hiding the fused
+# all-gather-GEMM kernel demonstrates; 0.5 is a conservative midpoint for
+# schedules whose compute windows only partially cover the collective.
+# A calibrated achievable overlap (``repro.calibrate.overlap``) replaces
+# the upper rungs when available.
+OVERLAP_CANDIDATES = (0.0, 0.5, 1.0)
 
 # search_many(executor='auto') switches from threads to the process pool
 # at this many jobs: below it, pool fork/spawn overhead dominates the
@@ -211,7 +221,9 @@ def candidate_specs(co: CompoundOp, arch: Arch, *,
                     variants: Optional[Sequence[str]] = None,
                     allow_stats_gran: bool = False,
                     fanouts: str = "divisors",
-                    divisor_tilings: bool = False) -> Dict[str, List]:
+                    divisor_tilings: bool = False,
+                    overlap: Optional[Sequence[float]] = None
+                    ) -> Dict[str, List]:
     """The discrete choice sets for each MappingSpec field.
 
     ``fanouts='divisors'`` (default) makes the sp_cluster/sp_core axes
@@ -219,6 +231,13 @@ def candidate_specs(co: CompoundOp, arch: Arch, *,
     power-of-two-only sets.  ``divisor_tilings=True`` additionally unions
     the m/k/n temporal tile counts with the divisors of their dims (same
     caps), for workloads whose dims have non-pow2 factors.
+
+    ``overlap`` is the compute–collective overlap candidate axis (values
+    in [0, 1]); ``None`` (default) pins it to ``[0.0]`` — the pre-overlap
+    serial charging, so existing searches stay bit-identical.  Pass
+    :data:`OVERLAP_CANDIDATES` (or a calibrated achievable overlap from
+    ``repro.calibrate.overlap``) to let the search hide collective time
+    under dependency-adjacent compute.
     """
     M = co.dim_sizes.get("M", 1)
     K = co.dim_sizes.get("K", 1)
@@ -250,6 +269,12 @@ def candidate_specs(co: CompoundOp, arch: Arch, *,
         sp_core = fanout_candidates(arch.cores_per_cluster, part)
     else:
         raise ValueError(f"unknown fanouts mode {fanouts!r}")
+    if overlap is None:
+        overlaps = [0.0]
+    else:
+        overlaps = [float(o) for o in overlap]
+        if not overlaps or any(o < 0.0 or o > 1.0 for o in overlaps):
+            raise ValueError("overlap candidates must lie in [0, 1]")
     return {
         "variant": list(variants),
         "m_tiles": m_tiles,
@@ -258,6 +283,7 @@ def candidate_specs(co: CompoundOp, arch: Arch, *,
         "sp_cluster": sp_cluster,
         "sp_core": sp_core,
         "schedule": ["sequential", "pipelined"],
+        "overlap": overlaps,
         "collective_gran": grans,
         "loop_order_gb": [("M", "N"), ("N", "M")],
     }
@@ -272,6 +298,7 @@ def _sample(rng: random.Random, cands: Dict[str, List]) -> MappingSpec:
         sp_cluster=rng.choice(cands["sp_cluster"]),
         sp_core=rng.choice(cands["sp_core"]),
         schedule=rng.choice(cands["schedule"]),
+        overlap=rng.choice(cands.get("overlap", [0.0])),
         collective_gran=rng.choice(cands["collective_gran"]),
         loop_order_gb=rng.choice(cands["loop_order_gb"]),
     )
@@ -304,6 +331,7 @@ def search(co: CompoundOp, arch: Arch, *,
            allow_stats_gran: bool = False,
            fanouts: str = "divisors",
            divisor_tilings: bool = False,
+           overlap: Optional[Sequence[float]] = None,
            hillclimb_frac: float = 0.5,
            mode: str = "auto",
            exhaustive_limit: int = EXHAUSTIVE_LIMIT,
@@ -338,8 +366,8 @@ def search(co: CompoundOp, arch: Arch, *,
     mode, cands, objective = _plan_search(co, arch, {
         "objective": objective, "variants": variants,
         "allow_stats_gran": allow_stats_gran, "fanouts": fanouts,
-        "divisor_tilings": divisor_tilings, "mode": mode,
-        "exhaustive_limit": exhaustive_limit,
+        "divisor_tilings": divisor_tilings, "overlap": overlap,
+        "mode": mode, "exhaustive_limit": exhaustive_limit,
         "candidate_list": candidate_list})
     if mode == "candidates":
         return _search_candidates(co, arch, list(candidate_list), objective)
@@ -374,7 +402,8 @@ def _plan_search(co: CompoundOp, arch: Arch, kw: Dict
         co, arch, variants=opt("variants"),
         allow_stats_gran=opt("allow_stats_gran"),
         fanouts=opt("fanouts"),
-        divisor_tilings=opt("divisor_tilings"))
+        divisor_tilings=opt("divisor_tilings"),
+        overlap=opt("overlap"))
     mode = opt("mode")
     if mode == "auto":
         topos = enumerate_topologies(co, cands)
@@ -416,6 +445,7 @@ def _search_candidates(co: CompoundOp, arch: Arch,
     for (variant, gran, lo), idxs in groups.items():
         topo = Topology(variant=variant, collective_gran=gran,
                         loop_order_gb=lo)
+        ovs = [specs[i].overlap for i in idxs]
         br = evaluate_specs_batch(
             co, arch, topo,
             [specs[i].m_tiles for i in idxs],
@@ -423,7 +453,10 @@ def _search_candidates(co: CompoundOp, arch: Arch,
             [specs[i].n_tiles for i in idxs],
             [specs[i].sp_cluster for i in idxs],
             [specs[i].sp_core for i in idxs],
-            [specs[i].schedule for i in idxs])
+            [specs[i].schedule for i in idxs],
+            # all-serial candidate lists keep the bit-identical
+            # pre-overlap path
+            ovs if any(o != 0.0 for o in ovs) else None)
         lat[idxs] = br.latency
         en[idxs] = br.energy_pj
         valid[idxs] = br.valid

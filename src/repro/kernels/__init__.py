@@ -3,10 +3,12 @@
 # RMSNorm, and the Mamba-2 SSD chunk scan.  Block sizes are chosen by the
 # COMET cost model (autotune.py); ref.py holds the pure-jnp oracles.
 from . import autotune, ops, ref
+from .allgather_gemm import allgather_gemm, streamed_gemm
 from .flash_attention import flash_attention
 from .gemm_layernorm import gemm_layernorm, gemm_rmsnorm
 from .gemm_softmax import gemm_softmax
 from .ssd import ssd_scan
 
-__all__ = ["autotune", "ops", "ref", "flash_attention", "gemm_layernorm",
-           "gemm_rmsnorm", "gemm_softmax", "ssd_scan"]
+__all__ = ["autotune", "ops", "ref", "allgather_gemm", "streamed_gemm",
+           "flash_attention", "gemm_layernorm", "gemm_rmsnorm",
+           "gemm_softmax", "ssd_scan"]

@@ -51,6 +51,13 @@ _LANE = 128  # MXU/VPU lane alignment
 
 SCHEDULES = ("sequential", "pipelined")
 
+# Compute–collective overlap axis for kernel candidates.  On the
+# single-chip kernel arch collectives cost zero, so the axis is inert
+# today (ties break to overlap=0.0, the serial point) — it exists so
+# multi-chip kernel archs rank double-buffered fused kernels (e.g.
+# all-gather-GEMM) against their serial splits through the same plans.
+OVERLAPS = (0.0, 1.0)
+
 # The kernel shapes exercised by the paper-table benchmarks and the kernel
 # test sweeps — the set a warm plan store must answer without solving
 # (benchmarks/search_throughput.py gates this; tests/test_plan.py verifies
@@ -99,18 +106,20 @@ def _kernel_arch() -> Arch:
 
 def _candidate_specs(variant: str, tiles: Sequence[Dict[str, int]]
                      ) -> Tuple[MappingSpec, ...]:
-    """Candidate MappingSpecs in schedule-major order (all sequential
-    first, then all pipelined — the pre-plan-refactor axis layout, kept
-    so selection ties break identically).  A tuple: immutable sequences
-    are what the plan layer's fingerprint memo may cache by identity."""
-    return tuple(MappingSpec(variant=variant, schedule=s, **t)
-                 for s in SCHEDULES for t in tiles)
+    """Candidate MappingSpecs in (schedule, overlap)-major order (all
+    sequential/overlap=0 first — the pre-plan-refactor axis layout, kept
+    so selection ties break identically), pairs minor.  A tuple: immutable
+    sequences are what the plan layer's fingerprint memo may cache by
+    identity."""
+    return tuple(MappingSpec(variant=variant, schedule=s, overlap=ov, **t)
+                 for s in SCHEDULES for ov in OVERLAPS for t in tiles)
 
 
 def _pair_of(plan, pairs: Sequence[Tuple[int, int]]) -> Tuple[int, int]:
     """Winning (block, block) pair of a candidates-mode plan: the stored
-    ``best_index`` walks the schedule-major candidate list, so modulo the
-    pair count recovers the pair regardless of which schedule won."""
+    ``best_index`` walks the (schedule, overlap)-major candidate list with
+    the pairs minor, so modulo the pair count recovers the pair regardless
+    of which schedule/overlap rung won."""
     return pairs[plan.best_index % len(pairs)]
 
 

@@ -35,14 +35,19 @@ def _mesh(kind: str):
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              *, opt_flags: Optional[Dict[str, Any]] = None,
-             tag: str = "", calibrated: Optional[str] = None) -> Dict[str, Any]:
+             tag: str = "", calibrated: Optional[str] = None,
+             overlap: float = 1.0) -> Dict[str, Any]:
     """Lower + compile one cell; returns the artifact dict.
 
     ``calibrated`` points at a ``repro.calibrate`` store (``True`` for
     the default plan-store root): when a valid calibration loads, the
     roofline's collective term is charged at the measured-and-fitted
     channel bandwidth instead of the datasheet link constant, and the
-    artifact records which calibration was applied."""
+    artifact records which calibration was applied.
+
+    ``overlap`` is the achievable compute-collective overlap factor for
+    the overlap-adjusted roofline bound (the serial bound is always
+    reported alongside; see ``roofline_terms``)."""
     import jax.numpy as jnp
     from repro.analysis import (parse_collectives, reconcile_cell,
                                 roofline_terms, trace_counts)
@@ -193,7 +198,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         else:
             rec["calibration"] = {"path": str(cal_path), "loaded": False}
     rec["roofline"] = roofline_terms(flops_pd, mem_traffic, wire_pd,
-                                     link_bw=link_bw)
+                                     link_bw=link_bw, overlap=overlap)
     rec["roofline_raw_hlo"] = roofline_terms(flops_raw, bytes_acc,
                                              stats.total_wire_bytes)
     # MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); decode: D = batch
@@ -259,9 +264,15 @@ def main() -> None:
                          "calibrated channel bandwidth from STORE (default: "
                          "the plan-store root) instead of the datasheet "
                          "link constant")
+    ap.add_argument("--overlap", type=float, default=1.0,
+                    help="achievable compute-collective overlap for the "
+                         "overlap-adjusted roofline bound (default 1.0; "
+                         "the serial bound is always reported too)")
     ap.add_argument("--opt", default="",
                     help="comma k=v model-config overrides (hillclimb)")
     args = ap.parse_args()
+    if not 0.0 <= args.overlap <= 1.0:
+        ap.error("--overlap must lie in [0, 1]")
 
     opt_flags: Dict[str, Any] = {}
     for kv in filter(None, args.opt.split(",")):
@@ -289,7 +300,8 @@ def main() -> None:
                 continue
             try:
                 rec = run_cell(arch, shape, mk, opt_flags=opt_flags,
-                               tag=args.tag, calibrated=args.calibrated)
+                               tag=args.tag, calibrated=args.calibrated,
+                               overlap=args.overlap)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 r = rec["roofline"]
@@ -304,7 +316,10 @@ def main() -> None:
                       f"compile={rec['lower_compile_s']:7.1f}s "
                       f"bottleneck={r['bottleneck']:10s} "
                       f"t=({r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
-                      f"{r['t_collective_s']:.3e})s {verdict}", flush=True)
+                      f"{r['t_collective_s']:.3e})s "
+                      f"serial={r['bound_serial_s']:.3e}s "
+                      f"ov{r['overlap']:g}={r['bound_overlap_s']:.3e}s"
+                      f"({r['bottleneck_overlap']}) {verdict}", flush=True)
             except Exception as e:  # noqa: BLE001 — sweep must continue
                 failures.append((arch, shape, mk, repr(e)))
                 print(f"FAIL {arch} {shape} {mk}: {e}", flush=True)

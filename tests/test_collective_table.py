@@ -94,6 +94,33 @@ def test_collective_zero_and_degenerate_cases():
     assert arr.volume_bytes[3] > 0
 
 
+def test_moe_dispatch_lat_refactor_bit_identical():
+    """The MoE dispatch benchmark's pre-refactor ``_lat`` helper
+    (``cc.volume_bytes / noc.channel_bandwidth + noc_latency(cc, noc)``)
+    must be *bitwise* what the shared ``collective_seconds`` entry point
+    charges, on every preset NoC, for the exact (type, volume) mix the
+    benchmark costs — so moving benchmarks/moe_dispatch.py onto the
+    shared helper changed no published number."""
+    from repro.core.collectives import collective_seconds
+
+    from benchmarks.moe_dispatch import CASES
+
+    for arch in PRESETS:
+        noc = arch.cluster_noc
+        P = noc.num_nodes
+        if P <= 1:
+            continue
+        for _name, d, k, _d_ff, t_l in CASES:
+            mix = [("AllReduce", t_l * d * 2),
+                   ("AllToAll", (t_l // P) * k * d * 2),
+                   ("AllGather", t_l * d * 2)]
+            for col, dv in mix:
+                cc = collective_cost(col, dv, P, noc)
+                legacy = cc.volume_bytes / noc.channel_bandwidth \
+                    + noc_latency(cc, noc)
+                assert collective_seconds(col, dv, P, noc) == legacy
+
+
 def test_mesh_scan_runs_once_per_noc(monkeypatch):
     """Regression (satellite): repeated collective_cost calls must not
     rescan the mesh — _mesh_avg_distance's O(nodes^2) manhattan sweep is

@@ -86,6 +86,66 @@ def test_tabulated_collective_bitwise_parity(dv, ps, col, arch_fn, noc_name):
                 assert arr.steps[j] == sc.steps
 
 
+@settings(max_examples=60, deadline=None)
+@given(M=DIM, N=DIM, K=st.sampled_from([64, 128]), m_tiles=TILES,
+       k_tiles=st.sampled_from([1, 2]), wl=WL,
+       variant=st.sampled_from(["fused_std", "fused_dist"]),
+       sched=st.sampled_from(["sequential", "pipelined"]),
+       ov_lo=st.floats(min_value=0.0, max_value=1.0),
+       ov_hi=st.floats(min_value=0.0, max_value=1.0))
+def test_overlap_monotone_and_serial_identity(M, N, K, m_tiles, k_tiles, wl,
+                                              variant, sched, ov_lo, ov_hi):
+    """Latency is monotone non-increasing in the overlap factor on any
+    mapping, and overlap=0.0 is *bitwise* the default-spec result (the
+    serial-identity guarantee the 48-pair suite pins per pair)."""
+    if ov_lo > ov_hi:
+        ov_lo, ov_hi = ov_hi, ov_lo
+    co = wl(M, N, K)
+    arch = cloud()
+
+    def run(ov):
+        return evaluate_mapping(co, arch, MappingSpec(
+            variant=variant, m_tiles=m_tiles, k_tiles=k_tiles,
+            schedule=sched, overlap=ov))
+
+    base = run(0.0)
+    default = evaluate_mapping(co, arch, MappingSpec(
+        variant=variant, m_tiles=m_tiles, k_tiles=k_tiles, schedule=sched))
+    assert base.latency == default.latency          # bitwise
+    assert base.energy_pj == default.energy_pj      # bitwise
+    lo, hi = run(ov_lo), run(ov_hi)
+    assert hi.latency <= lo.latency * (1 + 1e-12)
+    assert hi.latency <= base.latency * (1 + 1e-12)
+    assert hi.energy_pj == base.energy_pj  # overlap moves time, not joules
+
+
+@settings(max_examples=60, deadline=None)
+@given(dv=st.floats(min_value=1.0, max_value=1e9),
+       p=st.sampled_from([2, 4, 8, 16, 256]),
+       col=st.sampled_from(["AllReduce", "AllGather", "ReduceScatter",
+                            "AllToAll"]),
+       ov=st.floats(min_value=0.0, max_value=1.0),
+       comp_ratio=st.floats(min_value=0.0, max_value=4.0))
+def test_overlapped_collective_seconds_properties(dv, p, col, ov,
+                                                  comp_ratio):
+    """The overlapped cost stays within [exposed, serial], is exact at
+    the endpoints, and the hidden share never exceeds either the
+    hideable wire time or the adjacent compute window."""
+    from repro.core.collectives import (collective_overlap_terms,
+                                        collective_seconds,
+                                        overlapped_collective_seconds)
+    noc = cloud().cluster_noc
+    hideable, exposed = collective_overlap_terms(col, dv, p, noc)
+    serial = collective_seconds(col, dv, p, noc)
+    comp = hideable * comp_ratio
+    t = overlapped_collective_seconds(col, dv, p, noc, overlap=ov,
+                                      compute_seconds=comp)
+    assert exposed - 1e-15 <= t <= serial + 1e-15
+    hidden = serial - t
+    assert hidden <= ov * min(hideable, comp) + 1e-15
+    assert overlapped_collective_seconds(col, dv, p, noc) == serial
+
+
 @settings(max_examples=40, deadline=None)
 @given(n=st.integers(min_value=1, max_value=50), seed=st.integers(0, 2**31),
        rounding=st.sampled_from([None, 1, 2]))
